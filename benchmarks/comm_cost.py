@@ -1,0 +1,52 @@
+"""§6.3 (Eqs. 9-11): the communication-cost model at the paper's real
+dimensions, cross-checked against the byte size of the actual packed wire
+pytrees, plus the break-even sample count n ≳ 2dCK vs raw features."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core import gmm as G
+from repro.core import theory as T
+
+# (name, feature dim) — the paper's extractors
+EXTRACTORS = [("resnet50", 2048), ("vit_b16", 768), ("clip_vit_b32", 512)]
+
+
+def main(quick: bool = False):
+    for name, d in EXTRACTORS:
+        for Cn in (10, 100):
+            for cov, K in [("full", 1), ("diag", 10), ("spher", 10),
+                           ("spher", 1)]:
+                nb = G.comm_bytes(cov, d, K, Cn)
+                C.emit(f"comm_cost/{name}_d{d}_C{Cn}_{cov}_k{K}", 0,
+                       f"bytes={nb};{C.kb(nb)}")
+            hb = T.head_bytes(d, Cn)
+            C.emit(f"comm_cost/{name}_d{d}_C{Cn}_head", 0,
+                   f"bytes={hb};{C.kb(hb)}")
+            # break-even: diag GMM cheaper than raw features when n ≥ 2dCK
+            K = 10
+            n_even = G.comm_bytes("diag", d, K, Cn) // \
+                max(G.raw_feature_bytes(1, d), 1)
+            C.emit(f"comm_cost/{name}_d{d}_C{Cn}_breakeven_n", 0,
+                   f"n={n_even};rule_2dCK={2*d*Cn*K//(d+1)}")
+
+    # measured: pack a real fitted GMM and count actual wire scalars
+    key = jax.random.PRNGKey(6)
+    d, K = 64, 5
+    x = jax.random.normal(key, (500, d))
+    for cov in ("full", "diag", "spher"):
+        g, _ = G.fit_gmm(key, x, jnp.ones(500),
+                         G.GMMConfig(n_components=K, cov_type=cov, n_iter=3))
+        packed = G.pack_wire(g, cov)
+        measured = sum(a.size * a.dtype.itemsize
+                       for a in jax.tree.leaves(packed))
+        predicted = G.comm_bytes(cov, d, K, 1)
+        C.emit(f"comm_cost/measured_{cov}", 0,
+               f"measured={measured};predicted={predicted};"
+               f"match={measured == predicted}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Shared benchmark substrate: datasets, the stand-in foundation model, and
+CSV emission in run.py's ``name,us_per_call,derived`` format."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data as D
+from repro.configs import FOUNDATION_STANDIN
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+from repro.models import model as M
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]
+                          if jax.tree.leaves(out) else out)
+    return out, (time.time() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# the benchmark task: moderately-hard class-Gaussian dataset + frozen
+# foundation-model features (randomly-initialized stand-in backbone — random
+# features preserve the class geometry exactly as a pretrained extractor
+# does for natural images; DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchTask:
+    n_classes: int = 16
+    n_per_class: int = 120
+    input_dim: int = 48
+    class_sep: float = 1.3
+    noise: float = 1.0
+    feature_dim: int = 64        # stand-in backbone d_model
+
+
+_BACKBONE_CACHE: Dict = {}
+
+
+def _backbone_features(x: jnp.ndarray, fdim: int) -> jnp.ndarray:
+    """f(x): frozen stand-in foundation model (tiny bidirectional
+    transformer over 8-token 'patches' of the input vector)."""
+    if "params" not in _BACKBONE_CACHE:
+        cfg = dataclasses.replace(FOUNDATION_STANDIN, d_model=fdim,
+                                  frame_embed_dim=16)
+        _BACKBONE_CACHE["cfg"] = cfg
+        _BACKBONE_CACHE["params"] = M.init_params(cfg,
+                                                  jax.random.PRNGKey(17))
+        _BACKBONE_CACHE["fn"] = jax.jit(
+            lambda p, b: M.features(cfg, p, b))
+    cfg = _BACKBONE_CACHE["cfg"]
+    B, d_in = x.shape
+    n_frames = 8
+    per = d_in // n_frames
+    frames = x[:, : per * n_frames].reshape(B, n_frames, per)
+    frames = jnp.pad(frames, ((0, 0), (0, 0),
+                              (0, cfg.frame_embed_dim - per)))
+    out = []
+    for i in range(0, B, 512):
+        out.append(_BACKBONE_CACHE["fn"](_BACKBONE_CACHE["params"],
+                                         {"frames": frames[i:i + 512]}))
+    return jnp.concatenate(out)
+
+
+def make_feature_task(task: BenchTask = BenchTask(), domain: int = 0,
+                      seed: int = 0):
+    """Returns (train feats, train labels, test feats, test labels)."""
+    dcfg = D.DatasetConfig(n_classes=task.n_classes,
+                           n_per_class=task.n_per_class,
+                           input_dim=task.input_dim,
+                           class_sep=task.class_sep, noise=task.noise,
+                           n_domains=max(domain + 1, 1), seed=seed)
+    x, y = D.make_dataset(dcfg, domain=domain)
+    xt, yt = D.make_dataset(dcfg, domain=domain, split=1)
+    return (_backbone_features(x, task.feature_dim), y,
+            _backbone_features(xt, task.feature_dim), yt)
+
+
+def pad_clients(clients):
+    n_max = max(int(f.shape[0]) for f, _ in clients)
+    return [FP.pad_client(f, y, n_max) for f, y in clients]
+
+
+def default_fp_cfg(K: int = 5, cov: str = "diag",
+                   head_steps: int = 400) -> FP.FedPFTConfig:
+    return FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=K, cov_type=cov, n_iter=15),
+        head=H.HeadConfig(n_steps=head_steps, lr=3e-3))
+
+
+def accuracy(head, feats, labels) -> float:
+    return float(H.accuracy(head, feats, labels))
+
+
+def kb(n_bytes: float) -> str:
+    return f"{n_bytes/1024:.1f}KB"

@@ -1,0 +1,114 @@
+"""Figure 4 / Table 5: the communication-accuracy frontier.
+
+One-shot methods (Ensemble, AVG, voting, FedBE, FedPFT × {cov, K},
+DP-FedPFT) and multi-round methods (FedAvg / FedProx / FedYogi / DSFL at
+several round budgets) over a Dirichlet(β=0.1) split of the benchmark task
+across 20 clients — each point is (comm bytes, test accuracy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro import data as D
+from repro.core import dp as DP
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+from repro.fl import baselines as FB
+
+N_CLIENTS = 20
+BETA = 0.1
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    task = C.BenchTask()
+    f, y, ft, yt = C.make_feature_task(task)
+    d = int(f.shape[1])
+    Cn = task.n_classes
+    parts = D.dirichlet_partition(np.asarray(y), N_CLIENTS, beta=BETA)
+    clients = [(f[p], y[p]) for p in parts if len(p) >= Cn // 4]
+    clients = C.pad_clients(clients)
+
+    # ---- Centralized oracle (raw feature transfer) ----
+    cfg0 = C.default_fp_cfg()
+    (head_c, info_c), us = C.timed(FP.centralized_baseline, key, clients,
+                                   Cn, cfg0)
+    C.emit("frontier/centralized", us,
+           f"acc={C.accuracy(head_c, ft, yt):.4f};comm={info_c['comm_bytes']}")
+
+    # ---- one-shot head-level baselines ----
+    ks = jax.random.split(key, len(clients) + 1)
+    heads = [FB.local_train(k, H.init_head(k, d, Cn), cf, cy, Cn,
+                            n_steps=150, lr=3e-3)
+             for k, (cf, cy) in zip(ks[1:], clients)]
+    head_bytes = len(clients) * FB.head_comm_bytes(d, Cn)
+
+    pred = FB.ensemble_predict(heads, ft)
+    acc = float(jnp.mean((pred == yt).astype(jnp.float32)))
+    C.emit("frontier/ensemble", 0, f"acc={acc:.4f};comm={head_bytes}")
+
+    acc = C.accuracy(FB.avg_heads(heads), ft, yt)
+    C.emit("frontier/avg", 0, f"acc={acc:.4f};comm={head_bytes}")
+
+    be = FB.fedbe(key, heads, n_samples=10)
+    acc = float(jnp.mean((FB.ensemble_predict(be, ft) == yt)
+                         .astype(jnp.float32)))
+    C.emit("frontier/fedbe", 0, f"acc={acc:.4f};comm={head_bytes}")
+
+    # ---- FedPFT sweep ----
+    sweeps = [("diag", 1), ("diag", 5), ("diag", 10), ("spher", 1),
+              ("spher", 5), ("spher", 10)]
+    if quick:
+        sweeps = [("diag", 5), ("spher", 5)]
+    for cov, K in sweeps:
+        cfg = C.default_fp_cfg(K=K, cov=cov)
+        (head, info), us = C.timed(FP.run_fedpft, key, clients, Cn, cfg)
+        C.emit(f"frontier/fedpft_{cov}_k{K}", us,
+               f"acc={C.accuracy(head, ft, yt):.4f};"
+               f"comm={info['comm_bytes']}")
+
+    # ---- DP-FedPFT (K=1 full, eps=1) ----
+    # Gaussian-mechanism noise is σ ∝ 1/n, so DP needs the paper's
+    # dataset scale: a larger per-class count, and clients only transmit
+    # classes they hold a usable sample count of (σ ∝ 1/n again).
+    dp_task = C.BenchTask(n_per_class=120 if quick else 400)
+    fD, yD, ftD, ytD = C.make_feature_task(dp_task)
+    partsD = D.dirichlet_partition(np.asarray(yD), N_CLIENTS, beta=BETA)
+    clientsD = C.pad_clients([(fD[p], yD[p]) for p in partsD
+                              if len(p) >= Cn // 4])
+    cfg = FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
+        head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
+    msgs = []
+    for k, (cf, cy) in zip(jax.random.split(key, len(clientsD)), clientsD):
+        m = FP.client_update(k, cf, cy, Cn, cfg)
+        m.counts[m.counts < 50] = 0
+        priv = DP.privatize_classwise(
+            k, m.gmms, m.counts, DP.DPConfig(epsilon=1.0, delta=1e-2))
+        m.gmms = jax.device_get(priv)
+        msgs.append(m)
+    head, info = FP.server_aggregate(key, msgs, Cn, cfg)
+    ftn = ftD / jnp.maximum(jnp.linalg.norm(ftD, axis=-1, keepdims=True),
+                            1.0)
+    C.emit("frontier/dp_fedpft_eps1", 0,
+           f"acc={C.accuracy(head, ftn, ytD):.4f};"
+           f"comm={info['comm_bytes']}")
+
+    # ---- multi-round comparators ----
+    rounds_grid = [1, 5, 20] if not quick else [1, 5]
+    for name, kw in [("fedavg", {}), ("fedprox", dict(prox=0.1)),
+                     ("fedyogi", dict(server="yogi", server_lr=3e-3)),
+                     ("dsfl", dict(topk_frac=0.25))]:
+        for r in rounds_grid:
+            mk = FB.MultiRoundConfig(rounds=r, local_steps=30, lr=1e-2, **kw)
+            (gh, info), us = C.timed(FB.fedavg, key, clients, Cn, mk)
+            C.emit(f"frontier/{name}_r{r}", us,
+                   f"acc={C.accuracy(gh, ft, yt):.4f};"
+                   f"comm={info['comm_bytes']}")
+
+
+if __name__ == "__main__":
+    main()

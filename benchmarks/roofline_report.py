@@ -1,0 +1,77 @@
+"""Deliverable (g): render the roofline table from the dry-run JSON dumps
+(dryrun_1pod_baseline.json / dryrun_2pod_baseline.json) as markdown +
+CSV rows. The per-(arch × shape) three-term analysis for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks import common as C
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def render_markdown(rows, out=sys.stdout):
+    hdr = ("| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) | "
+           "bottleneck | MODEL_FLOPS | useful | note |")
+    print(hdr, file=out)
+    print("|" + "---|" * 9, file=out)
+    for r in rows:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                  f"SKIP: {r['reason']} |", file=out)
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |",
+                  file=out)
+            continue
+        ur = r.get("useful_ratio")
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+              f"{ur:.3f} | |" if ur else
+              f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['bottleneck']} | — | — | |", file=out)
+
+
+def main(quick: bool = False):
+    for mesh, fname in [("1pod", "dryrun_1pod_optimized.json"),
+                        ("2pod", "dryrun_2pod_optimized.json"),
+                        ("1pod_baseline", "dryrun_1pod_baseline.json"),
+                        ("2pod_baseline", "dryrun_2pod_baseline.json")]:
+        path = os.path.join(ROOT, fname)
+        if not os.path.exists(path):
+            C.emit(f"roofline/{mesh}", 0, "missing=run launch.dryrun --all")
+            continue
+        rows = load(path)
+        n_ok = sum(r["status"] == "ok" for r in rows)
+        n_skip = sum(r["status"] == "skip" for r in rows)
+        C.emit(f"roofline/{mesh}_pairs", 0,
+               f"ok={n_ok};skip={n_skip};"
+               f"fail={len(rows) - n_ok - n_skip}")
+        for r in rows:
+            if r["status"] != "ok":
+                continue
+            C.emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                   r.get("compile_s", 0) * 1e6,
+                   f"bn={r['bottleneck']};tc={r['t_compute_s']:.4f};"
+                   f"tm={r['t_memory_s']:.4f};"
+                   f"tx={r['t_collective_s']:.4f};"
+                   f"useful={r.get('useful_ratio') or 0:.3f}")
+
+
+if __name__ == "__main__":
+    main()
+    # also print the markdown table for EXPERIMENTS.md
+    for fname in ("dryrun_1pod_optimized.json",):
+        p = os.path.join(ROOT, fname)
+        if os.path.exists(p):
+            print()
+            render_markdown(load(p))

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  frontier          Fig. 4 / Table 5  comm-accuracy frontier, 20 clients
+  shifts            Table 2           label/covariate/task extreme shifts
+  topology          Fig. 6            5-client linear chain
+  gmm_quality       Fig. 7            GMM feature-fit quality (cov × K)
+  dp_tradeoff       Fig. 4 DP curves  ε sweep
+  reconstruction    Table 3 / Fig. 8  inversion attack ordering
+  comm_cost         Eqs. 9-11         cost model + measured wire bytes
+  ablations         beyond-paper      EM iters, seeding, wire precision,
+                                      heterogeneous per-client K (§6.3)
+  roofline_report   deliverable (g)   dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import common as C
+
+MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
+           "reconstruction", "shifts", "ablations", "frontier",
+           "roofline_report"]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grids for CI")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+            C.emit(f"{name}/__total__", (time.time() - t0) * 1e6, "ok")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            C.emit(f"{name}/__total__", (time.time() - t0) * 1e6, "FAILED")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Decentralized FedPFT (paper §4.2, Figure 5/6): five clients in a linear
+topology, each holding a DISJOINT slice of the label space. GMMs passed
+client-to-client accumulate the whole distribution in one pass.
+
+    PYTHONPATH=src python examples/decentralized_chain.py
+"""
+import jax
+
+from repro import data as D
+from repro.core import decentralized as DC
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+
+
+def main():
+    key = jax.random.PRNGKey(1)
+    n_classes = 10
+    dcfg = D.DatasetConfig(n_classes=n_classes, n_per_class=150,
+                           input_dim=32, class_sep=1.5)
+    x, y = D.make_dataset(dcfg)
+    xt, yt = D.make_dataset(dcfg, split=1)
+
+    # client i holds ONLY classes {2i, 2i+1} — an extreme disjoint split
+    clients = []
+    for i in range(5):
+        keep = (y == 2 * i) | (y == 2 * i + 1)
+        clients.append((x[keep], y[keep]))
+
+    cfg = FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=3, cov_type="diag", n_iter=15),
+        head=H.HeadConfig(n_steps=300, lr=3e-3))
+    msgs, infos = DC.run_chain(key, clients, n_classes, cfg)
+
+    print("client | classes seen | head acc on FULL test set")
+    for i, (m, info) in enumerate(zip(msgs, infos)):
+        acc = float(H.accuracy(info["head"], xt, yt))
+        seen = int((m.counts > 0).sum())
+        print(f"   {i+1}   |      {seen:2d}      |   {acc:.4f}")
+    print("→ knowledge accumulates along the chain; the last client covers "
+          "all classes after ONE pass.")
+
+
+if __name__ == "__main__":
+    main()

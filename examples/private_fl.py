@@ -1,0 +1,62 @@
+"""DP-FedPFT (paper §4.3, Theorem 4.1): formal (ε, δ)-DP via the Gaussian
+mechanism on per-class (μ, Σ), plus the reconstruction-attack comparison
+showing why raw-feature sharing is dangerous (§6.4).
+
+    PYTHONPATH=src python examples/private_fl.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import data as D
+from repro.core import dp as DP
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+from repro.core import reconstruction as RA
+
+
+def main():
+    key = jax.random.PRNGKey(2)
+    n_classes = 8
+    dcfg = D.DatasetConfig(n_classes=n_classes, n_per_class=400,
+                           input_dim=32, class_sep=2.0)
+    x, y = D.make_dataset(dcfg)
+    xt, yt = D.make_dataset(dcfg, split=1)
+    xn = lambda a: a / jnp.maximum(
+        jnp.linalg.norm(a, axis=-1, keepdims=True), 1.)
+
+    cfg = FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
+        head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
+
+    print("ε        acc     (δ=1e-2, K=1 full-cov, unit-norm features)")
+    for eps in (0.5, 1.0, 2.0, float("inf")):
+        msg = FP.client_update(key, x, y, n_classes, cfg)
+        if jnp.isfinite(eps):
+            priv = DP.privatize_classwise(
+                key, msg.gmms, msg.counts,
+                DP.DPConfig(epsilon=float(eps), delta=1e-2))
+            msg.gmms = jax.device_get(priv)
+        head, _ = FP.server_aggregate(key, [msg], n_classes, cfg)
+        acc = float(H.accuracy(head, xn(xt), yt))
+        print(f"{eps:<8} {acc:.4f}")
+
+    # ---- why not just send raw features? reconstruction attack ----
+    W = jax.random.normal(key, (32, 96)) / jnp.sqrt(32.0)
+    f = lambda z: jnp.tanh(0.3 * z @ W)
+    atk = RA.fit_inversion(f(x), x, RA.AttackConfig())   # attacker model
+    m_raw = RA.evaluate_attack(atk, f(xt), xt, RA.AttackConfig())
+    gm, cnt, _ = G.fit_classwise_gmms(key, f(xt), yt, n_classes,
+                                      G.GMMConfig(n_components=5,
+                                                  n_iter=10))
+    samples = jnp.concatenate([
+        G.sample(key, jax.tree.map(lambda a: a[c], gm), int(cnt[c]), "diag")
+        for c in range(n_classes)])
+    m_gmm = RA.evaluate_attack(atk, samples, xt, RA.AttackConfig())
+    print(f"\nreconstruction PSNR: raw features {m_raw['psnr_oracle']:.1f} dB"
+          f"  vs  FedPFT samples {m_gmm['psnr_oracle']:.1f} dB "
+          f"(lower = safer)")
+
+
+if __name__ == "__main__":
+    main()

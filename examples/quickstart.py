@@ -1,0 +1,50 @@
+"""Quickstart: one-shot FedPFT in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten clients with non-iid (Dirichlet β=0.1) data each fit per-class GMMs
+over foundation-model features, send ONLY the GMM parameters, and the
+server trains a global classifier head on synthetic features — one round,
+a fraction of the bytes, near-centralized accuracy.
+"""
+import jax
+
+from repro import data as D
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # synthetic stand-in for "CIFAR features from a frozen backbone"
+    dcfg = D.DatasetConfig(n_classes=10, n_per_class=200, input_dim=32,
+                           class_sep=1.5)
+    feats, labels = D.make_dataset(dcfg)
+    feats_test, labels_test = D.make_dataset(dcfg, split=1)
+
+    # ---- partition across 10 clients, highly non-iid ----
+    parts = D.dirichlet_partition(labels, n_clients=10, beta=0.1)
+    clients = [(feats[p], labels[p]) for p in parts if len(p) > 5]
+
+    # ---- one-shot FedPFT ----
+    cfg = FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=5, cov_type="diag", n_iter=20),
+        head=H.HeadConfig(n_steps=400, lr=3e-3))
+    head, info = FP.run_fedpft(key, clients, dcfg.n_classes, cfg)
+    acc = float(H.accuracy(head, feats_test, labels_test))
+
+    # ---- centralized oracle (ships raw features) ----
+    head_c, info_c = FP.centralized_baseline(key, clients, dcfg.n_classes,
+                                             cfg)
+    acc_c = float(H.accuracy(head_c, feats_test, labels_test))
+
+    print(f"FedPFT       acc={acc:.4f}  comm={info['comm_bytes']/1e3:8.1f} KB")
+    print(f"Centralized  acc={acc_c:.4f}  comm={info_c['comm_bytes']/1e3:8.1f} KB")
+    print(f"→ {info_c['comm_bytes']/info['comm_bytes']:.1f}× less "
+          f"communication, {abs(acc_c-acc)*100:.2f} pts from the oracle, "
+          f"one round.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Checkpointing: pytree ⇄ .npz with host-gather for sharded arrays.
+
+Keys are '/'-joined paths; dtypes round-trip exactly (bf16 stored via a
+uint16 view since npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif tree is None:
+        out[prefix.rstrip("/") + "#none"] = np.zeros((0,), np.int8)
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    flat = _flatten(tree)
+    arrays = {}
+    for k, v in flat.items():
+        # fully-addressable host gather (works for sharded jax.Arrays)
+        a = np.asarray(jax.device_get(v)) if not isinstance(v, np.ndarray) \
+            else v
+        if a.dtype == jnp.bfloat16:
+            arrays[k + "#bf16"] = a.view(np.uint16)
+        else:
+            arrays[k] = a
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load(path: str) -> Dict:
+    """Returns the nested-dict pytree (lists load back as int-keyed dicts)."""
+    z = np.load(path)
+    tree: Dict = {}
+    for k in z.files:
+        v = z[k]
+        if k.endswith("#none"):
+            k, v = k[:-5], None
+        elif k.endswith("#bf16"):
+            k, v = k[:-5], v.view(jnp.bfloat16)
+        node = tree
+        parts = k.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v if v is None else jnp.asarray(v)
+    return tree
+
+
+def restore_like(template: Any, loaded: Dict) -> Any:
+    """Reshape a loaded dict into the exact structure/dtypes of template."""
+    flat_t = _flatten(template)
+    flat_l = _flatten(loaded)
+    out = {}
+    for k, tv in flat_t.items():
+        lk = k if k in flat_l else k + "#bf16"
+        assert lk in flat_l or k.endswith("#none"), f"missing key {k}"
+        if k.endswith("#none"):
+            out[k] = None
+            continue
+        lv = flat_l[lk]
+        out[k] = jnp.asarray(lv).astype(tv.dtype).reshape(tv.shape)
+    # rebuild nested
+    tree: Dict = {}
+    for k, v in out.items():
+        clean = k.replace("#none", "")
+        node = tree
+        parts = clean.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return _match_structure(template, tree)
+
+
+def _match_structure(template, tree):
+    if isinstance(template, dict):
+        return {k: _match_structure(template[k], tree[k]) for k in template}
+    if isinstance(template, (list, tuple)):
+        seq = [_match_structure(v, tree[str(i)])
+               for i, v in enumerate(template)]
+        return type(template)(seq)
+    return tree

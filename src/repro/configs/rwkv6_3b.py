@@ -1,0 +1,21 @@
+"""rwkv6-3b (Finch) — attention-free, data-dependent decay. [arXiv:2404.05892]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,            # 2560 / head_size 64
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    mlp_variant="relu2",   # rwkv channel-mix uses squared relu
+    ssm_head_dim=64,
+    # WKV6 chunk length: total HBM traffic = (T/C)·state-overhead +
+    # T·C·Dh·pairwise — measured knee at C=64 (EXPERIMENTS.md §Perf iter 7:
+    # 260s @16 → 180s @64 → 192s @256 on train_4k), and 64 matches the
+    # Dh=64 MXU tile.
+    chunk_size=64,
+)

@@ -1,0 +1,16 @@
+"""The paper's contribution: FedPFT — parametric feature transfer.
+
+Modules:
+  gmm            jit/vmap EM over full/diag/spher Gaussian mixtures
+  head           linear classifier-head training (the global model's h)
+  fedpft         centralized one-shot FedPFT (Algorithm 1)
+  decentralized  chain-topology FedPFT (§4.2)
+  dp             DP-FedPFT Gaussian mechanism (Theorem 4.1)
+  theory         Theorem 6.1 bound + Eqs. 9-11 comm-cost model
+  reconstruction feature-inversion attack (§6.4)
+"""
+from repro.core import gmm, head, fedpft, decentralized, dp, theory
+from repro.core import reconstruction
+
+__all__ = ["gmm", "head", "fedpft", "decentralized", "dp", "theory",
+           "reconstruction"]

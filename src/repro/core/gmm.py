@@ -1,0 +1,290 @@
+"""Gaussian mixture models in pure JAX — the paper's parametric feature model.
+
+Replaces sklearn's ``GaussianMixture`` with a jit/vmap-compatible
+fixed-iteration EM so that *per-client × per-class* fits batch into one
+compiled SPMD program (the paper's Algorithm 1, line 8, reshaped for TPU).
+
+Covariance families (paper §3): ``full`` | ``diag`` | ``spher``.
+
+All functions take/return plain pytrees:
+
+    gmm = {"pi": (K,), "mu": (K,d), "cov": (K,d,d) | (K,d) | (K,)}
+
+Sample weights make EM masked-data-friendly: a class-conditional fit over a
+padded feature array is just ``weights = (labels == c)`` — this is how
+``vmap`` over classes works without ragged shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COV_TYPES = ("full", "diag", "spher")
+_LOG2PI = jnp.log(2.0 * jnp.pi)
+
+
+@dataclasses.dataclass(frozen=True)
+class GMMConfig:
+    n_components: int = 10
+    cov_type: str = "diag"
+    n_iter: int = 30
+    kmeans_iter: int = 5
+    reg: float = 1e-4
+
+    def __post_init__(self):
+        assert self.cov_type in COV_TYPES, self.cov_type
+
+
+# ---------------------------------------------------------------------------
+# log-density  (E-step hot path — see kernels/gmm_estep.py for the Pallas
+# version of the diag/spher branch; this is the reference used by default)
+# ---------------------------------------------------------------------------
+
+
+def log_prob_components(x: jax.Array, gmm: Dict, cov_type: str) -> jax.Array:
+    """log N(x_n | mu_k, Sigma_k): (N, d) -> (N, K). f32 internally."""
+    x = x.astype(jnp.float32)
+    mu = gmm["mu"].astype(jnp.float32)
+    cov = gmm["cov"].astype(jnp.float32)
+    N, d = x.shape
+    K = mu.shape[0]
+    if cov_type == "full":
+        chol = jnp.linalg.cholesky(cov)                       # (K,d,d)
+        diff = x[None] - mu[:, None]                          # (K,N,d)
+        sol = jax.vmap(
+            lambda L, b: jax.scipy.linalg.solve_triangular(L, b.T,
+                                                           lower=True)
+        )(chol, diff)                                         # (K,d,N)
+        maha = jnp.sum(jnp.square(sol), axis=1).T             # (N,K)
+        logdet = 2.0 * jnp.sum(
+            jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), axis=-1)
+    elif cov_type == "diag":
+        inv = 1.0 / cov                                       # (K,d)
+        # matmul-shaped expansion: ||x-mu||²_Σ = x²·inv - 2x·(mu·inv) + c_k
+        maha = (jnp.square(x) @ inv.T
+                - 2.0 * (x @ (mu * inv).T)
+                + jnp.sum(jnp.square(mu) * inv, axis=-1)[None])
+        logdet = jnp.sum(jnp.log(cov), axis=-1)
+    else:  # spher
+        var = cov                                             # (K,)
+        sq = jnp.sum(jnp.square(x), axis=-1, keepdims=True)   # (N,1)
+        maha = (sq - 2.0 * (x @ mu.T)
+                + jnp.sum(jnp.square(mu), axis=-1)[None]) / var[None]
+        logdet = d * jnp.log(var)
+    return -0.5 * (d * _LOG2PI + logdet[None] + maha)
+
+
+def log_prob(x: jax.Array, gmm: Dict, cov_type: str) -> jax.Array:
+    """Mixture log-density: (N,d) -> (N,)."""
+    comp = log_prob_components(x, gmm, cov_type)
+    logpi = jnp.log(jnp.clip(gmm["pi"].astype(jnp.float32), 1e-20))
+    return jax.scipy.special.logsumexp(comp + logpi[None], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init (weighted k-means seeding)
+# ---------------------------------------------------------------------------
+
+
+def _kmeans_init(key, x, weights, cfg: GMMConfig):
+    N, d = x.shape
+    K = cfg.n_components
+    # sample K seed points ∝ weights (with replacement; deterministic)
+    p = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    idx = jax.random.choice(key, N, (K,), p=p, replace=True)
+    mu = x[idx]                                               # (K,d)
+    # jitter identical seeds apart so empty clusters don't collapse EM
+    mu = mu + 1e-3 * jax.random.normal(key, mu.shape, x.dtype)
+
+    def step(mu, _):
+        d2 = (jnp.sum(jnp.square(x), -1, keepdims=True)
+              - 2 * x @ mu.T + jnp.sum(jnp.square(mu), -1)[None])
+        assign = jax.nn.one_hot(jnp.argmin(d2, -1), K) * weights[:, None]
+        cnt = jnp.sum(assign, axis=0)                         # (K,)
+        new_mu = (assign.T @ x) / jnp.maximum(cnt, 1e-12)[:, None]
+        mu = jnp.where((cnt > 1e-12)[:, None], new_mu, mu)
+        return mu, None
+    mu, _ = jax.lax.scan(step, mu, None, length=cfg.kmeans_iter)
+    return mu
+
+
+def _global_cov(x, weights, cfg: GMMConfig, mu0):
+    d = x.shape[-1]
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+    mean = (weights @ x) / wsum
+    diff = x - mean
+    var = (weights @ jnp.square(diff)) / wsum + cfg.reg       # (d,)
+    K = cfg.n_components
+    if cfg.cov_type == "full":
+        return jnp.tile(jnp.diag(var)[None], (K, 1, 1))
+    if cfg.cov_type == "diag":
+        return jnp.tile(var[None], (K, 1))
+    return jnp.full((K,), jnp.mean(var))
+
+
+# ---------------------------------------------------------------------------
+# EM
+# ---------------------------------------------------------------------------
+
+
+def _m_step(x, resp, cfg: GMMConfig):
+    """x: (N,d), resp: (N,K) already weight-multiplied."""
+    N, d = x.shape
+    nk = jnp.sum(resp, axis=0)                                # (K,)
+    total = jnp.maximum(jnp.sum(nk), 1e-12)
+    pi = nk / total
+    nk_safe = jnp.maximum(nk, 1e-12)[:, None]
+    mu = (resp.T @ x) / nk_safe                               # (K,d)
+    if cfg.cov_type == "full":
+        # Σ_k = E[xxᵀ] − μμᵀ  (one GEMM per k via einsum)
+        xx = jnp.einsum("nk,nd,ne->kde", resp, x, x) / nk_safe[..., None]
+        cov = xx - mu[:, :, None] * mu[:, None, :]
+        cov = cov + cfg.reg * jnp.eye(d)[None]
+    elif cfg.cov_type == "diag":
+        x2 = (resp.T @ jnp.square(x)) / nk_safe
+        cov = x2 - jnp.square(mu) + cfg.reg
+    else:
+        x2 = jnp.sum(resp * jnp.sum(jnp.square(x), -1, keepdims=True),
+                     axis=0) / nk_safe[:, 0]
+        cov = (x2 - jnp.sum(jnp.square(mu), -1)) / d + cfg.reg
+        cov = jnp.maximum(cov, cfg.reg)
+    return {"pi": pi, "mu": mu, "cov": cov}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def fit_gmm(key, x: jax.Array, weights: jax.Array,
+            cfg: GMMConfig) -> Tuple[Dict, jax.Array]:
+    """Weighted EM. x: (N,d); weights: (N,) nonneg (0 masks a row).
+
+    Returns (gmm, mean_loglik) where mean_loglik is the weighted mean
+    log-likelihood of the final model — the paper's ``L_EM`` (§6.2).
+    """
+    x = x.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    mu0 = _kmeans_init(key, x, weights, cfg)
+    gmm0 = {
+        "pi": jnp.full((cfg.n_components,), 1.0 / cfg.n_components),
+        "mu": mu0,
+        "cov": _global_cov(x, weights, cfg, mu0),
+    }
+
+    def em_iter(gmm, _):
+        comp = log_prob_components(x, gmm, cfg.cov_type)
+        logpi = jnp.log(jnp.clip(gmm["pi"], 1e-20))
+        lr = comp + logpi[None]
+        norm = jax.scipy.special.logsumexp(lr, axis=-1, keepdims=True)
+        resp = jnp.exp(lr - norm) * weights[:, None]
+        ll = jnp.sum(norm[:, 0] * weights) / jnp.maximum(jnp.sum(weights),
+                                                         1e-12)
+        return _m_step(x, resp, cfg), ll
+
+    gmm, lls = jax.lax.scan(em_iter, gmm0, None, length=cfg.n_iter)
+    # final loglik under the *returned* parameters
+    final_ll = jnp.sum(log_prob(x, gmm, cfg.cov_type) * weights) \
+        / jnp.maximum(jnp.sum(weights), 1e-12)
+    return gmm, final_ll
+
+
+def fit_classwise_gmms(key, feats: jax.Array, labels: jax.Array,
+                       n_classes: int, cfg: GMMConfig):
+    """One GMM per class via vmap (Algorithm 1, lines 6-9, batched).
+
+    Returns (gmms stacked over class axis, counts (C,), logliks (C,)).
+    Classes with zero samples get pi=uniform/mu=0 — mask with counts.
+    """
+    onehot = jax.nn.one_hot(labels, n_classes)                # (N,C)
+    counts = jnp.sum(onehot, axis=0)
+    keys = jax.random.split(key, n_classes)
+
+    def fit_one(k, w):
+        return fit_gmm(k, feats, w, cfg)
+    gmms, lls = jax.vmap(fit_one)(keys, onehot.T)
+    return gmms, counts, lls
+
+
+# ---------------------------------------------------------------------------
+# sampling  (server side — Algorithm 1, line 14)
+# ---------------------------------------------------------------------------
+
+
+def sample(key, gmm: Dict, n: int, cov_type: str) -> jax.Array:
+    """Draw n samples from the mixture: returns (n, d)."""
+    kc, kn = jax.random.split(key)
+    pi = jnp.clip(gmm["pi"].astype(jnp.float32), 1e-20)
+    comp = jax.random.categorical(kc, jnp.log(pi), shape=(n,))
+    mu = gmm["mu"].astype(jnp.float32)[comp]                  # (n,d)
+    eps = jax.random.normal(kn, mu.shape, jnp.float32)
+    cov = gmm["cov"].astype(jnp.float32)
+    if cov_type == "full":
+        chol = jnp.linalg.cholesky(cov)[comp]                 # (n,d,d)
+        return mu + jnp.einsum("nde,ne->nd", chol, eps)
+    if cov_type == "diag":
+        return mu + eps * jnp.sqrt(cov[comp])
+    return mu + eps * jnp.sqrt(cov[comp])[:, None]
+
+
+# ---------------------------------------------------------------------------
+# wire format / communication accounting (paper Eqs. 9-11)
+# ---------------------------------------------------------------------------
+
+
+def n_parameters(cov_type: str, d: int, K: int, C: int) -> int:
+    """Scalar count of one client's per-class GMM transfer."""
+    if cov_type == "full":
+        per = 2 * d + (d * d - d) // 2 + 1
+    elif cov_type == "diag":
+        per = 2 * d + 1
+    else:
+        per = d + 2
+    return per * K * C
+
+
+def comm_bytes(cov_type: str, d: int, K: int, C: int,
+               bytes_per_scalar: int = 2) -> int:
+    """Paper's 16-bit wire encoding (§5.1) → bytes on the wire."""
+    return n_parameters(cov_type, d, K, C) * bytes_per_scalar
+
+
+def raw_feature_bytes(n_samples: int, d: int,
+                      bytes_per_scalar: int = 2) -> int:
+    """Cost of the Centralized baseline: ship every feature row."""
+    return n_samples * (d + 1) * bytes_per_scalar  # +1 for the label
+
+
+def pack_wire(gmm: Dict, cov_type: str) -> Dict:
+    """bf16 wire-format pytree (what actually crosses the mesh)."""
+    packed = {"pi": gmm["pi"].astype(jnp.bfloat16),
+              "mu": gmm["mu"].astype(jnp.bfloat16)}
+    if cov_type == "full":
+        # only the lower triangle is information-bearing
+        d = gmm["cov"].shape[-1]
+        tri = jnp.tril_indices(d)
+        packed["cov"] = gmm["cov"][..., tri[0], tri[1]].astype(jnp.bfloat16)
+    else:
+        packed["cov"] = gmm["cov"].astype(jnp.bfloat16)
+    return packed
+
+
+def unpack_wire(packed: Dict, cov_type: str, d: int) -> Dict:
+    out = {"pi": packed["pi"].astype(jnp.float32),
+           "mu": packed["mu"].astype(jnp.float32)}
+    if cov_type == "full":
+        tri = jnp.tril_indices(d)
+        K = packed["pi"].shape[-1]
+        cov = jnp.zeros(packed["mu"].shape[:-1] + (d, d), jnp.float32)
+        cov = cov.at[..., tri[0], tri[1]].set(
+            packed["cov"].astype(jnp.float32))
+        diag = jnp.einsum("...ii->...i", cov)
+        out["cov"] = cov + jnp.swapaxes(cov, -1, -2) - _diag_embed(diag)
+    else:
+        out["cov"] = packed["cov"].astype(jnp.float32)
+    return out
+
+
+def _diag_embed(diag):
+    d = diag.shape[-1]
+    return diag[..., :, None] * jnp.eye(d, dtype=diag.dtype)

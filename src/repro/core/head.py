@@ -1,0 +1,92 @@
+"""Linear classifier head over foundation features (the ``h`` in w = h∘f).
+
+The paper trains h with Adam + cross-entropy on either real features
+(Centralized oracle) or GMM-sampled synthetic features (FedPFT). One jitted
+``lax.scan`` runs the whole optimization — no python step loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    n_steps: int = 500
+    batch_size: int = 256
+    lr: float = 1e-3          # paper: Adam 1e-4; higher works for linear head
+    weight_decay: float = 0.0
+
+
+def init_head(key, d: int, n_classes: int) -> Dict:
+    w = jax.random.normal(key, (d, n_classes), jnp.float32) / jnp.sqrt(d)
+    return {"w": w * 0.01, "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def head_logits(params: Dict, feats: jax.Array) -> jax.Array:
+    return feats.astype(jnp.float32) @ params["w"] + params["b"]
+
+
+def _xent(params, feats, labels, weights):
+    logits = head_logits(params, feats)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.sum(ll * weights) / jnp.maximum(jnp.sum(weights), 1e-9)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_classes"))
+def train_head(key, feats: jax.Array, labels: jax.Array, n_classes: int,
+               cfg: HeadConfig,
+               weights: Optional[jax.Array] = None) -> Tuple[Dict, jax.Array]:
+    """Train a linear head on (feats, labels). weights=0 masks rows.
+
+    Returns (head params, per-step loss trace).
+    """
+    N, d = feats.shape
+    if weights is None:
+        weights = jnp.ones((N,), jnp.float32)
+    feats = feats.astype(jnp.float32)
+    k_init, k_steps = jax.random.split(key)
+    params = init_head(k_init, d, n_classes)
+    opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
+    opt_state = opt.init(params)
+    bs = min(cfg.batch_size, N)
+    p_sample = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    def step(carry, k):
+        params, opt_state = carry
+        idx = jax.random.choice(k, N, (bs,), p=p_sample, replace=True)
+        loss, grads = jax.value_and_grad(_xent)(
+            params, feats[idx], labels[idx], jnp.ones((bs,), jnp.float32))
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return (params, opt_state), loss
+
+    keys = jax.random.split(k_steps, cfg.n_steps)
+    (params, _), losses = jax.lax.scan(step, (params, opt_state), keys)
+    return params, losses
+
+
+def accuracy(params: Dict, feats: jax.Array, labels: jax.Array,
+             weights: Optional[jax.Array] = None) -> jax.Array:
+    pred = jnp.argmax(head_logits(params, feats), axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if weights is None:
+        return jnp.mean(hit)
+    return jnp.sum(hit * weights) / jnp.maximum(jnp.sum(weights), 1e-9)
+
+
+def classwise_01_loss(params: Dict, feats: jax.Array, labels: jax.Array,
+                      n_classes: int) -> jax.Array:
+    """Per-class 0-1 loss (used by the Theorem 6.1 bound evaluator)."""
+    pred = jnp.argmax(head_logits(params, feats), axis=-1)
+    miss = (pred != labels).astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, n_classes)                # (N,C)
+    cnt = jnp.sum(onehot, axis=0)
+    return (miss @ onehot) / jnp.maximum(cnt, 1.0), cnt

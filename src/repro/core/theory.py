@@ -1,0 +1,77 @@
+"""Theory evaluators — Theorem 6.1 bound and Eqs. 9-11 comm-cost model.
+
+Theorem 6.1 (0-1 loss form):
+    l_i ≤ E_c[ 2·l~_c − l~_c² + ((1 − l~_c)/√2)·sqrt(H^{i,c} − L_EM^{i,c}) ]
+
+where l~_c is the server head's 0-1 loss on client i's *synthetic* class-c
+features, H^{i,c} the (dequantized) self-entropy of the class-c feature
+distribution and L_EM the EM mean log-likelihood. H is estimated with the
+Kozachenko–Leonenko 1-NN estimator.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gmm as G
+
+EULER_GAMMA = 0.5772156649015329
+
+
+def entropy_knn(x: jax.Array, dequantize_scale: float = 1e-3,
+                key=None) -> jax.Array:
+    """Kozachenko–Leonenko 1-NN differential-entropy estimate (nats).
+
+    H^ = (d/N)·Σ log r_i + log(N−1) + log V_d + γ
+
+    The paper dequantizes features before estimating H (Appendix C.2) —
+    we add uniform noise of scale ``dequantize_scale``.
+    """
+    N, d = x.shape
+    x = x.astype(jnp.float32)
+    if key is not None and dequantize_scale > 0:
+        x = x + dequantize_scale * jax.random.uniform(key, x.shape)
+    sq = jnp.sum(jnp.square(x), axis=-1)
+    d2 = sq[:, None] - 2.0 * (x @ x.T) + sq[None, :]
+    d2 = d2 + jnp.eye(N) * 1e12                      # exclude self
+    r = jnp.sqrt(jnp.maximum(jnp.min(d2, axis=-1), 1e-24))
+    log_vd = (d / 2.0) * math.log(math.pi) - jax.scipy.special.gammaln(
+        d / 2.0 + 1.0)
+    return (d * jnp.mean(jnp.log(r)) + jnp.log(float(N - 1)) + log_vd
+            + EULER_GAMMA)
+
+
+def theorem61_bound(synth_01_loss: jax.Array, H: jax.Array,
+                    L_EM: jax.Array, class_weights: jax.Array) -> jax.Array:
+    """RHS of Theorem 6.1. All args are per-class (C,) arrays."""
+    l = jnp.clip(synth_01_loss, 0.0, 1.0)
+    gap = jnp.sqrt(jnp.maximum(H - L_EM, 0.0))
+    per_class = 2 * l - jnp.square(l) + (1 - l) / jnp.sqrt(2.0) * gap
+    w = class_weights / jnp.maximum(jnp.sum(class_weights), 1e-9)
+    return jnp.sum(per_class * w)
+
+
+def accuracy_lower_bound(synth_acc: jax.Array, H: jax.Array,
+                         L_EM: jax.Array, class_weights: jax.Array
+                         ) -> jax.Array:
+    """Equation (26): Acc(h, F^i) ≥ E_c[ acc_c·(acc_c − sqrt((H−L_EM)/2)) ]."""
+    a = jnp.clip(synth_acc, 0.0, 1.0)
+    gap = jnp.sqrt(jnp.maximum(H - L_EM, 0.0) / 2.0)
+    per_class = a * (a - gap)
+    w = class_weights / jnp.maximum(jnp.sum(class_weights), 1e-9)
+    return jnp.sum(per_class * w)
+
+
+# Eqs. 9-11 re-exported from the gmm module (single source of truth)
+n_parameters = G.n_parameters
+comm_bytes = G.comm_bytes
+raw_feature_bytes = G.raw_feature_bytes
+
+
+def head_bytes(d: int, n_classes: int, bytes_per_scalar: int = 2) -> int:
+    """Cost of sending the classifier head itself (Cd + C) — §6.3 notes
+    Cost(G_spher(K=1)) equals this."""
+    return (n_classes * d + n_classes) * bytes_per_scalar

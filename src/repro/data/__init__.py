@@ -1,0 +1,135 @@
+"""Data pipeline: synthetic class-structured datasets + FL partitioners.
+
+The paper's experiments run on CIFAR/PACS/Office-Home/Caltech/Cars/Pets/
+Food101 — unavailable offline, so we substitute *synthetic multi-domain
+class-Gaussian datasets in input space* with the same knobs the paper
+varies: number of classes, per-class sample counts, domain (covariate)
+structure, and disjoint task unions. See DESIGN.md §6.
+
+Exports:
+  make_dataset              class-Gaussian images (inputs, labels)
+  dirichlet_partition       Dirichlet(β) non-iid client split (Fig. 9/10)
+  disjoint_label_split      label-shift two-client split (§5.3)
+  covariate_shift_pair      two domains of the same classes (§5.3)
+  task_shift_pair           two disjoint datasets/tasks (§5.3)
+  iid_shards                uniform iid split (Fig. 5 linear topology)
+  token_lm_batches          synthetic LM token stream for backbone training
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetConfig:
+    n_classes: int = 10
+    n_per_class: int = 200
+    input_dim: int = 64
+    class_sep: float = 3.0      # distance scale between class centers
+    noise: float = 1.0          # within-class stddev
+    n_domains: int = 1          # covariate-shift domain count
+    domain_shift: float = 2.0   # per-domain offset scale
+    seed: int = 0
+
+
+def make_dataset(cfg: DatasetConfig, domain: int = 0, split: int = 0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Class-Gaussian dataset: x = center_c + domain_offset + noise.
+
+    Centers are shared across domains (so a feature extractor trained on one
+    domain transfers, as with real foundation models); the domain offset is
+    a random direction + per-domain linear distortion — covariate shift.
+    ``split`` varies the sample noise only (0 = train, 1 = test, …) while
+    keeping the class geometry fixed.
+    """
+    rng = np.random.RandomState(cfg.seed)
+    centers = rng.randn(cfg.n_classes, cfg.input_dim) * cfg.class_sep
+    # domain transforms drawn once, deterministically, for all domains
+    offsets = rng.randn(max(cfg.n_domains, 1), cfg.input_dim) \
+        * cfg.domain_shift
+    mixes = np.stack([
+        np.eye(cfg.input_dim)
+        + 0.1 * cfg.domain_shift * rng.randn(cfg.input_dim, cfg.input_dim)
+        for _ in range(max(cfg.n_domains, 1))
+    ])
+    rng_d = np.random.RandomState(cfg.seed * 9973 + domain * 101 + split + 1)
+    labels = np.repeat(np.arange(cfg.n_classes), cfg.n_per_class)
+    x = centers[labels] + cfg.noise * rng_d.randn(len(labels), cfg.input_dim)
+    if cfg.n_domains > 1:   # domain transform only in covariate-shift mode
+        x = x @ mixes[domain].T + offsets[domain]
+    perm = rng_d.permutation(len(labels))
+    return jnp.asarray(x[perm], jnp.float32), jnp.asarray(labels[perm],
+                                                          jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# FL partitioners
+# ---------------------------------------------------------------------------
+
+
+def dirichlet_partition(labels, n_clients: int, beta: float = 0.1,
+                        seed: int = 0) -> List[np.ndarray]:
+    """Paper §5.2: per-class Dirichlet(β) allocation over clients."""
+    labels = np.asarray(labels)
+    rng = np.random.RandomState(seed)
+    n_classes = int(labels.max()) + 1
+    client_idx = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([beta] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx, cuts)):
+            client_idx[i].extend(part.tolist())
+    return [np.asarray(sorted(ix), np.int64) for ix in client_idx]
+
+
+def iid_shards(n: int, n_clients: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    return [np.sort(s) for s in np.array_split(perm, n_clients)]
+
+
+def disjoint_label_split(labels) -> Tuple[np.ndarray, np.ndarray]:
+    """§5.3 label shift: source gets classes [0, C/2), destination the rest."""
+    labels = np.asarray(labels)
+    C = int(labels.max()) + 1
+    src = np.where(labels < C // 2)[0]
+    dst = np.where(labels >= C // 2)[0]
+    return src, dst
+
+
+def covariate_shift_pair(cfg: DatasetConfig):
+    """§5.3 covariate shift: same classes, two maximally distinct domains."""
+    assert cfg.n_domains >= 2
+    return make_dataset(cfg, domain=0), make_dataset(cfg, domain=1)
+
+
+def task_shift_pair(cfg_a: DatasetConfig, cfg_b: DatasetConfig,
+                    ) -> Tuple[Tuple, Tuple, int]:
+    """§5.3 task shift: two disjoint datasets; labels of B are offset so the
+    union is one C_a + C_b-way problem (Birds→Cars style)."""
+    xa, ya = make_dataset(cfg_a)
+    xb, yb = make_dataset(dataclasses.replace(cfg_b, seed=cfg_b.seed + 7919))
+    yb = yb + cfg_a.n_classes
+    return (xa, ya), (xb, yb), cfg_a.n_classes + cfg_b.n_classes
+
+
+# ---------------------------------------------------------------------------
+# synthetic token streams (backbone pre-training / train_step inputs)
+# ---------------------------------------------------------------------------
+
+
+def token_lm_batches(key, vocab_size: int, batch: int, seq_len: int,
+                     n_batches: int):
+    """Zipf-ish synthetic LM stream with next-token labels."""
+    def one(k):
+        logits = -1.2 * jnp.log1p(jnp.arange(vocab_size, dtype=jnp.float32))
+        toks = jax.random.categorical(k, logits, shape=(batch, seq_len + 1))
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return [one(k) for k in jax.random.split(key, n_batches)]

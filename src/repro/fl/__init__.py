@@ -1,0 +1,17 @@
+"""FL baselines the paper compares against (Figures 1/4, Tables 2/5).
+
+All baselines operate at the classifier-head level over frozen foundation
+features — exactly the paper's setup. Multi-round: FedAvg, FedProx, FedYogi,
+DSFL (top-k sparsified FedAvg). One-shot: parameter averaging (AVG),
+prediction Ensemble, FedBE (Bayesian model ensemble), and KD (source→dest
+head distillation).
+
+Communication accounting matches §6.3: each head transfer costs
+(C·d + C)·bytes_per_scalar; multi-round methods pay it up+down per round.
+"""
+from repro.fl.baselines import (MultiRoundConfig, avg_heads,
+                                ensemble_predict, fedavg, fedbe,
+                                head_comm_bytes, kd_transfer, local_train)
+
+__all__ = ["MultiRoundConfig", "fedavg", "local_train", "avg_heads",
+           "ensemble_predict", "fedbe", "kd_transfer", "head_comm_bytes"]

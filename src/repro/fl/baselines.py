@@ -1,0 +1,208 @@
+"""Multi-round and one-shot FL baselines over classifier heads."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import head as H
+
+
+def head_comm_bytes(d: int, n_classes: int, bytes_per_scalar: int = 2) -> int:
+    return (n_classes * d + n_classes) * bytes_per_scalar
+
+
+# ---------------------------------------------------------------------------
+# local training (shared by every baseline)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_classes", "n_steps", "batch_size",
+                                   "lr", "prox"))
+def local_train(key, head0: Dict, feats, labels, n_classes: int,
+                n_steps: int = 100, batch_size: int = 256, lr: float = 1e-3,
+                prox: float = 0.0) -> Dict:
+    """SGD/Adam local epochs from a given global head. ``prox`` > 0 adds
+    FedProx's (μ/2)·||w − w_global||² regularizer."""
+    N = feats.shape[0]
+    feats = feats.astype(jnp.float32)
+    opt = optim.adam(lr)
+    opt_state = opt.init(head0)
+    bs = min(batch_size, N)
+
+    def loss_fn(p, f, y):
+        logits = H.head_logits(p, f)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(lp, y[:, None], axis=-1)[:, 0]
+        loss = -jnp.mean(ll)
+        if prox:
+            loss += 0.5 * prox * sum(
+                jnp.sum(jnp.square(a - b)) for a, b in
+                zip(jax.tree.leaves(p), jax.tree.leaves(head0)))
+        return loss
+
+    def step(carry, k):
+        p, s = carry
+        idx = jax.random.randint(k, (bs,), 0, N)
+        loss, g = jax.value_and_grad(loss_fn)(p, feats[idx], labels[idx])
+        upd, s = opt.update(g, s, p)
+        p = optim.apply_updates(p, upd)
+        return (p, s), loss
+
+    (p, _), _ = jax.lax.scan(step, (head0, opt_state),
+                             jax.random.split(key, n_steps))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# one-shot aggregators
+# ---------------------------------------------------------------------------
+
+
+def avg_heads(heads: Sequence[Dict], weights: Optional[Sequence[float]] = None
+              ) -> Dict:
+    """AVG baseline: (weighted) parameter mean of locally-trained heads."""
+    if weights is None:
+        weights = [1.0] * len(heads)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return jax.tree.map(
+        lambda *xs: jnp.sum(jnp.stack(xs) * w.reshape((-1,) + (1,) *
+                                                      xs[0].ndim), axis=0),
+        *heads)
+
+
+def ensemble_predict(heads: Sequence[Dict], feats) -> jax.Array:
+    """Ensemble baseline: average class probabilities, then argmax."""
+    probs = sum(jax.nn.softmax(H.head_logits(h, feats), -1) for h in heads)
+    return jnp.argmax(probs, axis=-1)
+
+
+def fedbe(key, heads: Sequence[Dict], n_samples: int = 15) -> List[Dict]:
+    """FedBE: sample heads from a Gaussian posterior over client heads and
+    ensemble them together with the clients' (Chen & Chao, 2020)."""
+    mean = avg_heads(heads)
+    var = jax.tree.map(
+        lambda *xs: jnp.var(jnp.stack(xs), axis=0) + 1e-8, *heads)
+    samples = []
+    for k in jax.random.split(key, n_samples):
+        eps = jax.tree.map(
+            lambda m: jax.random.normal(k, m.shape, jnp.float32), mean)
+        samples.append(jax.tree.map(
+            lambda m, v, e: m + jnp.sqrt(v) * e, mean, var, eps))
+    return list(heads) + samples
+
+
+def kd_transfer(key, teacher: Dict, student0: Dict, feats, labels,
+                n_classes: int, n_steps: int = 200, lr: float = 1e-3,
+                temperature: float = 5.0, alpha: float = 0.5) -> Dict:
+    """KD baseline (§5.3): distill the received (source) head into the local
+    (destination) head using the destination's own features."""
+    feats = feats.astype(jnp.float32)
+    N = feats.shape[0]
+    t_logits = H.head_logits(teacher, feats) / temperature
+    t_probs = jax.nn.softmax(t_logits, axis=-1)
+    opt = optim.adam(lr)
+    state = opt.init(student0)
+
+    def loss_fn(p, f, y, tp):
+        logits = H.head_logits(p, f)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(jnp.take_along_axis(lp, y[:, None], -1))
+        kd = -jnp.mean(jnp.sum(tp * jax.nn.log_softmax(logits / temperature,
+                                                       -1), -1))
+        return alpha * ce + (1 - alpha) * kd * temperature ** 2
+
+    def step(carry, k):
+        p, s = carry
+        idx = jax.random.randint(k, (min(256, N),), 0, N)
+        loss, g = jax.value_and_grad(loss_fn)(p, feats[idx], labels[idx],
+                                              t_probs[idx])
+        upd, s = opt.update(g, s, p)
+        return (optim.apply_updates(p, upd), s), loss
+
+    (p, _), _ = jax.lax.scan(step, (student0, state),
+                             jax.random.split(key, n_steps))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# multi-round methods
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiRoundConfig:
+    rounds: int = 10
+    local_steps: int = 50
+    lr: float = 1e-2
+    prox: float = 0.0            # FedProx μ
+    server: str = "avg"          # "avg" | "yogi"
+    server_lr: float = 1e-2      # FedYogi η
+    topk_frac: float = 0.0       # DSFL sparsification (0 = dense)
+    bytes_per_scalar: int = 2
+
+
+def _sparsify(delta: Dict, frac: float) -> Dict:
+    """DSFL: keep only the top-|frac| entries of the update by magnitude."""
+    flat, tree = jax.tree.flatten(delta)
+    vec = jnp.concatenate([f.ravel() for f in flat])
+    k = max(1, int(len(vec) * frac))
+    thresh = jnp.sort(jnp.abs(vec))[-k]
+    sparse = [jnp.where(jnp.abs(f) >= thresh, f, 0.0) for f in flat]
+    return jax.tree.unflatten(tree, sparse)
+
+
+def fedavg(key, client_datasets: Sequence[Tuple], n_classes: int,
+           cfg: MultiRoundConfig) -> Tuple[Dict, Dict]:
+    """FedAvg / FedProx / FedYogi / DSFL, selected by cfg fields.
+
+    Returns (global head, info with per-round comm bytes)."""
+    d = int(client_datasets[0][0].shape[1])
+    sizes = np.array([len(y) for _, y in client_datasets], np.float64)
+    weights = sizes / sizes.sum()
+    k_init, key = jax.random.split(key)
+    global_head = H.init_head(k_init, d, n_classes)
+    server_opt = optim.yogi(cfg.server_lr) if cfg.server == "yogi" else None
+    server_state = server_opt.init(global_head) if server_opt else None
+
+    per_round = 2 * len(client_datasets) * head_comm_bytes(
+        d, n_classes, cfg.bytes_per_scalar)
+    if cfg.topk_frac:
+        # uplink sparsified: value+index per kept entry (~2 scalars each)
+        n_params = n_classes * d + n_classes
+        up = int(n_params * cfg.topk_frac) * 2 * cfg.bytes_per_scalar
+        per_round = len(client_datasets) * (
+            up + head_comm_bytes(d, n_classes, cfg.bytes_per_scalar))
+
+    history = []
+    for r in range(cfg.rounds):
+        key, *ks = jax.random.split(key, len(client_datasets) + 1)
+        deltas = []
+        for k, (f, y) in zip(ks, client_datasets):
+            local = local_train(k, global_head, f, y, n_classes,
+                                n_steps=cfg.local_steps, lr=cfg.lr,
+                                prox=cfg.prox)
+            delta = jax.tree.map(lambda a, b: a - b, local, global_head)
+            if cfg.topk_frac:
+                delta = _sparsify(delta, cfg.topk_frac)
+            deltas.append(delta)
+        mean_delta = jax.tree.map(
+            lambda *xs: sum(w * x for w, x in zip(weights, xs)), *deltas)
+        if server_opt:
+            # yogi treats −mean_delta as the gradient
+            grad = jax.tree.map(lambda g: -g, mean_delta)
+            upd, server_state = server_opt.update(grad, server_state,
+                                                  global_head)
+            global_head = optim.apply_updates(global_head, upd)
+        else:
+            global_head = jax.tree.map(lambda a, b: a + b, global_head,
+                                       mean_delta)
+        history.append(per_round * (r + 1))
+    return global_head, {"comm_bytes": per_round * cfg.rounds,
+                         "comm_history": history}

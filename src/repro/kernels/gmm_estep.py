@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for the GMM E-step hot path (diag/spher families).
+
+The per-client workload is an (N, K) log-responsibility matrix over d-dim
+features. Expanding the Mahalanobis term makes it two GEMMs —
+
+    maha[n,k] = x²_n · inv_k  −  2 x_n · (μ_k ⊙ inv_k)  +  c_k
+
+— which maps directly onto the MXU. The kernel tiles N×K into 128-aligned
+VMEM blocks; the d (contraction) axis stays whole per block (d ≤ ~8k keeps
+an (BN, d) f32 x-tile well under VMEM).
+
+Tiling:
+    grid = (N / BN, K / BK)
+    x tile       (BN, d)   — re-streamed per K block (grid minor axis = K,
+                             so x stays VMEM-resident across the K sweep)
+    inv/muinv    (BK, d)
+    const        (BK,)
+    out          (BN, BK)
+
+Full covariance is intentionally NOT a kernel: its E-step is
+Cholesky/triangular-solve dominated (not MXU-shaped) and is left to XLA —
+see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LOG2PI = math.log(2.0 * math.pi)
+
+
+def _estep_kernel(x_ref, xsq_ref, inv_ref, muinv_ref, const_ref, out_ref):
+    """One (BN, BK) output tile: two MXU matmuls + broadcast add."""
+    x = x_ref[...]                       # (BN, d) f32
+    xsq = xsq_ref[...]                   # (BN, d) f32
+    inv = inv_ref[...]                   # (BK, d) f32
+    muinv = muinv_ref[...]               # (BK, d) f32
+    const = const_ref[...]               # (1, BK) f32
+    maha = (
+        jax.lax.dot_general(xsq, inv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        - 2.0 * jax.lax.dot_general(x, muinv, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    )
+    out_ref[...] = -0.5 * maha + const
+
+
+def _pad_to(a, axis, mult, value=0.0):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def estep(x: jax.Array, mu: jax.Array, var: jax.Array, pi: jax.Array,
+          *, block_n: int = 256, block_k: int = 128,
+          interpret: bool = True) -> jax.Array:
+    """log[π_k N(x_n | μ_k, diag Σ_k)] : (N, d) × (K, d) → (N, K).
+
+    Matches ``ref.estep_ref``. ``interpret=True`` executes the kernel body
+    in Python on CPU (this container); on TPU pass ``interpret=False``.
+    """
+    N, d = x.shape
+    K = mu.shape[0]
+    x = x.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    var = jnp.broadcast_to(var.astype(jnp.float32), (K, d))
+
+    inv = 1.0 / var
+    muinv = mu * inv
+    # fold every per-component scalar into one constant row:
+    #   c_k = log π_k − ½(d·log2π + Σlogσ² + Σμ²/σ²)
+    const = (jnp.log(jnp.clip(pi.astype(jnp.float32), 1e-20))
+             - 0.5 * (d * _LOG2PI + jnp.sum(jnp.log(var), -1)
+                      + jnp.sum(jnp.square(mu) * inv, -1)))  # (K,)
+
+    bn = min(block_n, max(8, N))
+    bk = min(block_k, max(8, K))
+    xp = _pad_to(x, 0, bn)
+    xsq = jnp.square(xp)
+    invp = _pad_to(inv, 0, bk, value=1.0)
+    muinvp = _pad_to(muinv, 0, bk)
+    constp = _pad_to(const[None, :], 1, bk)
+    Np, Kp = xp.shape[0], invp.shape[0]
+
+    out = pl.pallas_call(
+        _estep_kernel,
+        grid=(Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),   # x
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),   # x²
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),   # inv
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),   # μ·inv
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),   # const
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Kp), jnp.float32),
+        interpret=interpret,
+    )(xp, xsq, invp, muinvp, constp)
+    return out[:N, :K]

@@ -1,0 +1,55 @@
+"""jit'd public wrappers around the Pallas kernels, with XLA fallback.
+
+``use_pallas(True/False)`` flips the backend globally (tests exercise both);
+on this CPU container the Pallas path runs in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm_estep import estep
+from repro.kernels.ssd import ssd as ssd_kernel
+from repro.kernels.wkv6 import wkv6 as wkv6_kernel
+
+_STATE = {"use_pallas": False, "interpret": True}
+
+
+def use_pallas(enable: bool = True, interpret: bool = True):
+    _STATE["use_pallas"] = enable
+    _STATE["interpret"] = interpret
+
+
+def gmm_estep(x, mu, var, pi):
+    """(N,d) × (K,d) diag/spher E-step numerators → (N,K)."""
+    if _STATE["use_pallas"]:
+        return estep(x, mu, var, pi, interpret=_STATE["interpret"])
+    K, d = mu.shape[0], x.shape[-1]
+    return ref.estep_ref(x, mu, jnp.broadcast_to(var, (K, d)), pi)
+
+
+def attention(q, k, v, *, causal=True, window=0, prefix=0):
+    """(B,H,Sq,D) × (B,Hkv,Sk,D) flash attention → (B,H,Sq,D)."""
+    if _STATE["use_pallas"]:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               prefix=prefix, interpret=_STATE["interpret"])
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             prefix=prefix)
+
+
+def wkv6(r, k, v, lw, u, s0, chunk: int = 16):
+    """(B,H,T,Dh) WKV6 chunked recurrence → (out, final state)."""
+    if _STATE["use_pallas"]:
+        return wkv6_kernel(r, k, v, lw, u, s0, chunk=chunk,
+                           interpret=_STATE["interpret"])
+    return ref.wkv6_ref(r, k, v, lw, u, s0, chunk=chunk)
+
+
+def ssd(x, a_log, B, C, s0, chunk: int = 64):
+    """(Bt,H,T,P) Mamba2 SSD chunked recurrence → (y, final state)."""
+    if _STATE["use_pallas"]:
+        return ssd_kernel(x, a_log, B, C, s0, chunk=chunk,
+                          interpret=_STATE["interpret"])
+    return ref.ssd_ref(x, a_log, B, C, s0, chunk=chunk)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels must match them (tests sweep
+shapes/dtypes with ``assert_allclose``). They are also the XLA fallback used
+on hosts without TPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_LOG2PI = math.log(2.0 * math.pi)
+
+
+def estep_ref(x: jax.Array, mu: jax.Array, var: jax.Array,
+              pi: jax.Array) -> jax.Array:
+    """Diag-covariance E-step log-responsibility numerators.
+
+    x: (N, d) f32; mu: (K, d); var: (K, d) (diag Σ); pi: (K,).
+    Returns log[π_k N(x_n | μ_k, Σ_k)]: (N, K) f32.
+
+    spher is the var = broadcast-to-(K, d) special case.
+    """
+    x = x.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    var = var.astype(jnp.float32)
+    d = x.shape[-1]
+    inv = 1.0 / var
+    maha = (jnp.square(x) @ inv.T
+            - 2.0 * (x @ (mu * inv).T)
+            + jnp.sum(jnp.square(mu) * inv, axis=-1)[None])
+    logdet = jnp.sum(jnp.log(var), axis=-1)
+    logp = -0.5 * (d * _LOG2PI + logdet[None] + maha)
+    return logp + jnp.log(jnp.clip(pi.astype(jnp.float32), 1e-20))[None]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  prefix: int = 0) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) — GQA via head grouping.
+    Query n attends key m iff (not causal) or m ≤ n (absolute positions:
+    queries occupy the LAST Sq positions of the Sk context);
+    window > 0 additionally requires n - m < window;
+    prefix > 0 makes the first ``prefix`` keys visible to everyone
+    (bidirectional image prefix in the VLM).
+    """
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / math.sqrt(D)
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    rel = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    if prefix > 0:
+        mask |= (k_pos < prefix)[None, :]
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, lw, u, s0, chunk: int = 16):
+    """WKV6 oracle — delegates to the model-layer chunked implementation
+    (itself validated against the naive per-token recurrence in tests)."""
+    from repro.models.rwkv import wkv6_chunked
+    return wkv6_chunked(r, k, v, lw, u, s0, chunk=chunk)
+
+
+def ssd_ref(x, a_log, B, C, s0, chunk: int = 64):
+    """Mamba2 SSD oracle — the model-layer chunked implementation."""
+    from repro.models.mamba2 import ssd_chunked
+    return ssd_chunked(x, a_log, B, C, s0, chunk=chunk)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked recurrence (zamba2's SSM
+backbone hot-spot).
+
+Per (batch, head) with scalar per-step decay a_t (= exp(Δ_t·A_h)) and state
+S ∈ R^{N×P}:
+
+    S_t = a_t · S_{t-1} + B_t x_tᵀ        (B_t ∈ R^N shared across heads)
+    y_t = C_tᵀ S_t
+
+Chunked SSD factorization, state VMEM-resident across the chunk sweep
+(grid minor axis). Unlike WKV6 the decay is scalar per step, so every
+intra-chunk term is a plain (C×C)·(C×P) matmul — pure MXU work.
+
+Oracle: ``ref.ssd_ref`` (== models.mamba2.ssd_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, al_ref, b_ref, c_ref, s0_ref, o_ref, sout_ref,
+                s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    xc = x_ref[0].astype(jnp.float32)          # (C, P)
+    alc = al_ref[0][:, 0].astype(jnp.float32)  # (C,) log decay ≤ 0
+    Bc = b_ref[0].astype(jnp.float32)          # (C, N)
+    Cc = c_ref[0].astype(jnp.float32)          # (C, N)
+    S = s_scr[...]                             # (N, P)
+
+    cw = jnp.cumsum(alc)                       # (C,)
+    # intra-chunk: y_t = Σ_{s≤t} e^{cw_t - cw_s} (C_t·B_s) x_s
+    expo = cw[:, None] - cw[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    G = jnp.where(tri, jnp.exp(expo), 0.0)     # (C, C)
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    M = G * CB                                 # (C, C)
+    y = jax.lax.dot_general(M, xc, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += (C_t e^{cw_t}) S
+    Cdec = Cc * jnp.exp(cw)[:, None]
+    y += jax.lax.dot_general(Cdec, S, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state: S' = e^{cw_last} S + Σ_s (B_s e^{cw_last - cw_s}) x_sᵀ
+    last = cw[-1]
+    Bdec = Bc * jnp.exp(last - cw)[:, None]
+    S_new = jnp.exp(last) * S + jax.lax.dot_general(
+        Bdec, xc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sout_ref[0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, a_log, B, C, s0, *, chunk: int = 64, interpret: bool = True):
+    """x: (Bt,H,T,P); a_log: (Bt,H,T); B, C: (Bt,T,N) shared over heads;
+    s0: (Bt,H,N,P) f32. Returns (y (Bt,H,T,P), final state).
+
+    Matches ``models.mamba2.ssd_chunked``. T % chunk == 0 required.
+    """
+    Bt, H, T, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    Cn = chunk
+    nc = T // Cn
+    BH = Bt * H
+    xx = x.reshape(BH, T, P)
+    al = a_log.reshape(BH, 1, T)  # keep a 2-D-blockable layout
+    al = jnp.swapaxes(al, 1, 2).reshape(BH, T, 1)
+    Bb = jnp.broadcast_to(B[:, None], (Bt, H, T, N)).reshape(BH, T, N)
+    Cb = jnp.broadcast_to(C[:, None], (Bt, H, T, N)).reshape(BH, T, N)
+    ss = s0.reshape(BH, N, P)
+
+    y, s_fin = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=Cn),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, Cn, P), lambda b, c: (b, c, 0)),   # x
+            pl.BlockSpec((1, Cn, 1), lambda b, c: (b, c, 0)),   # a_log
+            pl.BlockSpec((1, Cn, N), lambda b, c: (b, c, 0)),   # B
+            pl.BlockSpec((1, Cn, N), lambda b, c: (b, c, 0)),   # C
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),    # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Cn, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xx, al, Bb, Cb, ss)
+    return y.reshape(Bt, H, T, P), s_fin.reshape(Bt, H, N, P)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the WKV6 chunked recurrence (RWKV6's hot spot).
+
+Per (batch, head): state S ∈ R^{Dh×Dh} carried across T/C chunks; within a
+chunk the pairwise decay products are computed in log space. The state
+lives in VMEM scratch across the chunk sweep (grid minor axis), exactly
+like flash attention's (m, l, acc) — the chunk axis is sequential, the
+(B·H) axis parallel.
+
+    out_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(exp(lw_t)) S_{t-1} + k_t v_tᵀ          lw_t ≤ 0
+
+Oracle: ``ref.wkv6_ref`` (== models.rwkv.wkv6_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref,
+                 sout_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    rc = r_ref[0].astype(jnp.float32)          # (C, Dh)
+    kc = k_ref[0].astype(jnp.float32)
+    vc = v_ref[0].astype(jnp.float32)
+    lwc = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)           # (1, Dh)
+    S = s_scr[...]                             # (Dh, Dh)
+
+    cw = jnp.cumsum(lwc, axis=0)               # (C, Dh) Σ_{j≤t} lw
+    cw_prev = cw - lwc
+    # intra-chunk pairwise: A[t,s] = Σ_d r[t,d] k[s,d] e^{cw[t-1,d]-cw[s,d]}
+    expo = cw_prev[:, None, :] - cw[None, :, :]          # (C, C, Dh)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    P = jnp.where(tri[:, :, None], jnp.exp(expo), 0.0)
+    A = jnp.sum(rc[:, None, :] * kc[None, :, :] * P, axis=-1)  # (C, C)
+    diag = jnp.sum(rc * kc * u, axis=-1)                 # (C,)
+    out = jax.lax.dot_general(A, vc, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    out += diag[:, None] * vc
+    # inter-chunk: r[t] ⊙ e^{cw[t-1]} against the carried state
+    rdec = rc * jnp.exp(cw_prev)
+    out += jax.lax.dot_general(rdec, S, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # state update: S' = diag(e^{cw[-1]}) S + Σ_s diag(e^{cw[-1]-cw[s]}) k_s v_sᵀ
+    last = cw[-1:, :]                                    # (1, Dh)
+    kdec = kc * jnp.exp(last - cw)                       # (C, Dh)
+    S_new = jnp.exp(last).T * S + jax.lax.dot_general(
+        kdec, vc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sout_ref[0] = S_new
+
+
+def _pad_t(a, mult):
+    pad = (-a.shape[2]) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, s0, *, chunk: int = 16, interpret: bool = True):
+    """r,k,v,lw: (B,H,T,Dh); u: (H,Dh); s0: (B,H,Dh,Dh) f32.
+
+    Returns (out (B,H,T,Dh), final state (B,H,Dh,Dh)). Padding rows (if
+    T % chunk) carry lw=0 ⇒ decay 1; their extra state writes are sliced
+    off the OUTPUT but would corrupt the final state, so T must satisfy
+    T % chunk == 0 (asserted) — callers pick chunk | T.
+    """
+    B, H, T, Dh = r.shape
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    nc = T // C
+    BH = B * H
+    rr, kk, vv, ll = (a.reshape(BH, T, Dh) for a in (r, k, v, lw))
+    uu = jnp.broadcast_to(u[None], (B, H, Dh)).reshape(BH, 1, Dh)
+    ss = s0.reshape(BH, Dh, Dh)
+
+    out, s_fin = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=C),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),   # r
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),   # k
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),   # v
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),   # lw
+            pl.BlockSpec((1, 1, Dh), lambda b, c: (b, 0, 0)),   # u
+            pl.BlockSpec((1, Dh, Dh), lambda b, c: (b, 0, 0)),  # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Dh, Dh), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, Dh), r.dtype),
+            jax.ShapeDtypeStruct((BH, Dh, Dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh, Dh), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ll, uu, ss)
+    return (out.reshape(B, H, T, Dh), s_fin.reshape(B, H, Dh, Dh))

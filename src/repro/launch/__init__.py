@@ -1,0 +1,7 @@
+"""Distributed runtime: mesh factory, FSDP×TP sharding rules, multi-pod
+dry-run driver, HLO cost model, roofline derivation, training driver.
+
+NOTE: import ``repro.launch.dryrun`` FIRST (before any other jax-touching
+import) when you need the 512-device production mesh — it sets XLA_FLAGS
+before jax initializes.
+"""

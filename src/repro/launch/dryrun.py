@@ -1,0 +1,219 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove every (architecture × input shape) lowers and
+compiles on the production mesh, and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json-out out.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b \
+        --shape train_4k --multi-pod
+
+The XLA_FLAGS line above MUST precede any jax import: it fakes 512 host
+devices so ``jax.make_mesh`` can build the (2,16,16) production mesh.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim, serve, train
+from repro.configs import ARCHS, get_config
+from repro.launch import input_specs as I
+from repro.launch import roofline as R
+from repro.launch import sharding as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as Mmod
+from repro.models.config import INPUT_SHAPES
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_tree(shape_tree, spec_tree, mesh):
+    """Attach shardings to a ShapeDtypeStruct pytree."""
+    shardings = S.named(spec_tree, mesh)
+    return jax.tree.map(
+        lambda sds, sh: SDS(sds.shape, sds.dtype, sharding=sh),
+        shape_tree, shardings)
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               microbatch: int = 0, donate: bool = True,
+               act_sharding: bool = True):
+    """Lower + compile one (arch, shape) on the production mesh.
+
+    Returns (compiled, lowered, mesh, meta-dict)."""
+    # scan-over-layers keeps the HLO (and single-core compile time) small;
+    # the roofline reader (launch/hlo_cost.py) re-multiplies loop bodies by
+    # their trip counts, so costs stay exact.
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = I.pair_supported(cfg, shape)
+    if not ok:
+        raise SkipPair(reason)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    window = I.window_for(cfg, shape)
+    mode = shape.kind
+
+    p_shape = I.params_shapes(cfg)
+    p_spec = S.param_specs(cfg, p_shape, mesh)
+    params_in = _sds_tree(p_shape, p_spec, mesh)
+
+    if mode == "train":
+        opt = optim.adam(1e-4)
+        o_shape = jax.eval_shape(opt.init, p_shape)
+        o_spec = S.opt_specs(p_spec, o_shape)
+        opt_in = _sds_tree(o_shape, o_spec, mesh)
+        b_shape = I.batch_specs_for(cfg, shape, mode)
+        b_spec = S.batch_specs(b_shape, mesh)
+        batch_in = _sds_tree(b_shape, b_spec, mesh)
+        step = train.make_train_step(cfg, opt, window=window,
+                                     microbatch=microbatch)
+        jitted = jax.jit(
+            step,
+            in_shardings=(S.named(p_spec, mesh), S.named(o_spec, mesh),
+                          S.named(b_spec, mesh)),
+            out_shardings=(S.named(p_spec, mesh), S.named(o_spec, mesh),
+                           None),
+            donate_argnums=(0, 1) if donate else ())
+        with mesh, Mmod.activation_sharding(
+                S.activation_constraint(mesh) if act_sharding else
+                (lambda x, k: x)):
+            lowered = jitted.lower(params_in, opt_in, batch_in)
+    elif mode == "prefill":
+        b_shape = I.batch_specs_for(cfg, shape, mode)
+        b_spec = S.batch_specs(b_shape, mesh)
+        batch_in = _sds_tree(b_shape, b_spec, mesh)
+        step = serve.make_prefill_step(cfg, shape.seq_len, window=window)
+        jitted = jax.jit(step, in_shardings=(S.named(p_spec, mesh),
+                                             S.named(b_spec, mesh)))
+        with mesh, Mmod.activation_sharding(
+                S.activation_constraint(mesh) if act_sharding else
+                (lambda x, k: x)):
+            lowered = jitted.lower(params_in, batch_in)
+    else:  # decode
+        c_shape = I.cache_shapes(cfg, shape)
+        c_spec = S.cache_specs(c_shape, mesh)
+        cache_in = _sds_tree(c_shape, c_spec, mesh)
+        b_shape = I.batch_specs_for(cfg, shape, mode)
+        b_spec = S.batch_specs(b_shape, mesh)
+        tok_in = _sds_tree(b_shape, b_spec, mesh)["tokens"]
+        pos_in = SDS((), jnp.int32)
+        step = serve.make_decode_step(cfg, window=window)
+        jitted = jax.jit(
+            step,
+            in_shardings=(S.named(p_spec, mesh), S.named(c_spec, mesh),
+                          S.named(S.batch_specs(b_shape, mesh),
+                                  mesh)["tokens"], None),
+            out_shardings=(None, S.named(c_spec, mesh)),
+            donate_argnums=(1,) if donate else ())
+        with mesh, Mmod.activation_sharding(
+                S.activation_constraint(mesh) if act_sharding else
+                (lambda x, k: x)):
+            lowered = jitted.lower(params_in, cache_in, tok_in, pos_in)
+
+    compiled = lowered.compile()
+    meta = {"arch": arch, "shape": shape_name, "mode": mode,
+            "window": window, "multi_pod": multi_pod,
+            "n_chips": 512 if multi_pod else 256}
+    return compiled, lowered, mesh, meta
+
+
+class SkipPair(Exception):
+    pass
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             microbatch: int = 0, verbose: bool = True,
+             act_sharding: bool = True):
+    t0 = time.time()
+    try:
+        compiled, lowered, mesh, meta = lower_pair(
+            arch, shape_name, multi_pod=multi_pod, microbatch=microbatch,
+            act_sharding=act_sharding)
+    except SkipPair as e:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": str(e)}
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mf = R.model_flops_for(cfg, shape, meta["mode"])
+    hlo = compiled.as_text()
+    rl = R.from_compiled(compiled, meta["n_chips"], model_flops=mf,
+                         hlo_text=hlo)
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "total_bytes": int(mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes),
+        }
+    except Exception as e:  # backend without memory_analysis
+        mem_info = {"error": str(e)}
+    row = {"arch": arch, "shape": shape_name, "status": "ok",
+           "compile_s": round(time.time() - t0, 1), **meta, **rl.row(),
+           "memory": mem_info}
+    if verbose:
+        ur = rl.useful_flop_ratio
+        ur_s = f"useful={ur:.2f}" if ur else "useful=n/a"
+        print(f"[dryrun] {arch:24s} {shape_name:12s} "
+              f"{'2pod' if multi_pod else '1pod'} OK "
+              f"t_comp={rl.t_compute:.4f}s t_mem={rl.t_memory:.4f}s "
+              f"t_coll={rl.t_collective:.4f}s bn={rl.bottleneck} {ur_s} "
+              f"compile={row['compile_s']}s", flush=True)
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch × shape) on the chosen mesh")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--no-act-sharding", action="store_true",
+                    help="disable activation constraints (the §Perf "
+                         "baseline configuration)")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    rows = []
+    for a, s in pairs:
+        try:
+            rows.append(run_pair(a, s, multi_pod=args.multi_pod,
+                                 microbatch=args.microbatch,
+                                 act_sharding=not args.no_act_sharding))
+        except Exception:
+            traceback.print_exc()
+            rows.append({"arch": a, "shape": s, "status": "fail",
+                         "error": traceback.format_exc(limit=3)})
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"[dryrun] ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

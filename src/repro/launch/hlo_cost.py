@@ -1,0 +1,289 @@
+"""Scan-aware cost model over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~n_layers.
+This module re-derives the three roofline inputs by walking the HLO call
+graph and multiplying every while body by its trip count (recovered from the
+loop-condition's compare-against-constant).
+
+Counted per executed instruction:
+  * dot FLOPs       2 · |result| · (contraction size)   — exact for matmuls
+  * elementwise     |result| per non-dot compute op      — cheap proxy
+  * bytes           operands + result at fusion/op granularity (no double
+                    count inside fused computations)
+  * collectives     operand bytes of all-gather / all-reduce /
+                    reduce-scatter / all-to-all / collective-permute
+
+All quantities are per-device (the post-SPMD module is one partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ZERO_FLOP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "reshape", "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "iota",
+    "convert", "get-dimension-size", "after-all", "copy-start", "copy-done",
+    "partition-id", "replica-id", "bitcast-convert", "gather", "scatter",
+    "rng-bit-generator", "custom-call", "infeed", "outfeed", "domain",
+    "opt-barrier", "conditional", "call", "while", "fusion",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over possibly-tuple type strings."""
+    elems = tot = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * b
+    return elems, tot
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str                     # operand list + attrs (raw)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s or s.startswith("HloModule"):
+            continue
+        if not s.startswith(" ") and ("{" in s) and _COMP_RE.match(s.strip()):
+            m = _COMP_RE.match(s.strip())
+            cur = Computation(m.group(1), [])
+            comps[cur.name] = cur
+            continue
+        m = _NAME_RE.match(s)
+        if m and cur is not None:
+            name = m.group(1)
+            rest = s[m.end():]
+            # --- type: tuple "(...)" (may contain /*index=N*/ comments)
+            #           or scalar "dtype[dims]{layout}"
+            if rest.startswith("("):
+                depth, ti = 0, len(rest) - 1
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            ti = i
+                            break
+                type_str, rest = rest[:ti + 1], rest[ti + 1:].lstrip()
+            else:
+                mt = re.match(r"\S+", rest)
+                if not mt:
+                    continue
+                type_str, rest = mt.group(0), rest[mt.end():].lstrip()
+            mo = _OP_RE.match(rest)
+            if not mo:
+                continue
+            op = mo.group(1)
+            args = rest[mo.end():]
+            # operand names: %refs inside the top-level parens only
+            depth, args_end = 1, len(args)
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        args_end = i
+                        break
+            operands = _OPERAND_RE.findall(args[:args_end])
+            cur.instrs.append(Instr(name, type_str, op, rest, operands))
+    return comps
+
+
+def _index_shapes(comps: Dict[str, Computation]) -> Dict[str, str]:
+    return {i.name: i.type_str for c in comps.values() for i in c.instrs}
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans compare the induction var against a constant bound."""
+    best = 1
+    for i in cond.instrs:
+        if i.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + i.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_ATTR_COMP_RE = re.compile(
+    r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elem_flops
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.dot_flops += mult * other.dot_flops
+        self.elem_flops += mult * other.elem_flops
+        self.bytes += mult * other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += mult * v
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(instr.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if not m or not instr.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape = shapes.get(instr.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contraction = 1
+    for di in m.group(1).split(","):
+        if di:
+            contraction *= dims[int(di)]
+    return 2.0 * out_elems * contraction
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.shapes = _index_shapes(self.comps)
+        self._memo: Dict[str, Cost] = {}
+        entry = None
+        for name in self.comps:
+            # ENTRY computation is the one nothing else calls; jax names it
+            # 'main...' — fall back to the first computation.
+            if name.startswith("main"):
+                entry = name
+        if entry is None:
+            called = set()
+            for c in self.comps.values():
+                for i in c.instrs:
+                    called.update(_ATTR_COMP_RE.findall(i.rest))
+            entries = [n for n in self.comps if n not in called]
+            entry = entries[0] if entries else next(iter(self.comps))
+        self.entry = entry
+
+    def _operand_bytes(self, instr: Instr) -> float:
+        tot = 0.0
+        for op in instr.operands:
+            if op in self.shapes:
+                tot += _shape_elems_bytes(self.shapes[op])[1]
+        return tot
+
+    def comp_cost(self, name: str, *, fused: bool = False) -> Cost:
+        key = f"{name}|{fused}"
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            return cost
+        self._memo[key] = cost  # break cycles defensively
+        for i in comp.instrs:
+            elems, out_bytes = _shape_elems_bytes(i.type_str)
+            if i.op == "dot":
+                cost.dot_flops += _dot_flops(i, self.shapes)
+            elif i.op == "convolution":
+                cost.dot_flops += 2.0 * elems  # lower bound; none emitted
+            elif i.op in COLLECTIVES or i.op.rstrip("-start") in COLLECTIVES:
+                base = i.op[:-6] if i.op.endswith("-start") else i.op
+                if base in COLLECTIVES:
+                    cost.coll[base] += self._operand_bytes(i)
+            elif i.op not in _ZERO_FLOP_OPS and not i.op.endswith("-done"):
+                cost.elem_flops += elems
+            # ---- bytes: only at op granularity of the *outer* program
+            if not fused and i.op not in ("parameter", "constant", "tuple",
+                                          "get-tuple-element", "bitcast"):
+                cost.bytes += out_bytes + self._operand_bytes(i)
+            # ---- recursion
+            if i.op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", i.rest)
+                if m:
+                    sub = self.comp_cost(m.group(1), fused=True)
+                    c2 = Cost()
+                    c2.add(sub)
+                    c2.bytes = 0.0  # fusion internals don't touch HBM
+                    cost.add(c2)
+            elif i.op == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", i.rest)
+                cond = re.search(r"condition=%?([\w\.\-]+)", i.rest)
+                tm = _TRIP_RE.search(i.rest)   # XLA's own trip-count analysis
+                if tm:
+                    trips = int(tm.group(1))
+                elif cond and cond.group(1) in self.comps:
+                    trips = _trip_count(self.comps[cond.group(1)])
+                else:
+                    trips = 1
+                if body:
+                    cost.add(self.comp_cost(body.group(1), fused=fused),
+                             mult=trips)
+            elif i.op in ("call", "conditional", "custom-call", "reduce",
+                          "map", "sort", "scatter", "select-and-scatter",
+                          "reduce-window", "all-reduce"):
+                for sub in _ATTR_COMP_RE.findall(i.rest):
+                    if sub in self.comps and sub != name:
+                        # reduction lambdas: count once per output element
+                        subc = self.comp_cost(sub, fused=True)
+                        c2 = Cost()
+                        c2.add(subc, mult=max(elems, 1))
+                        c2.bytes = 0.0
+                        if i.op in ("call", "conditional"):
+                            c2 = self.comp_cost(sub, fused=fused)
+                        cost.add(c2)
+        self._memo[key] = cost
+        return cost
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)

@@ -1,0 +1,171 @@
+"""Roofline term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak FLOP/s)
+    memory term     = HLO bytes / (chips × HBM bandwidth)
+    collective term = collective bytes / (chips × ICI link bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed out of the post-SPMD HLO text (operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# dtype[1,2,3]{...} — operand shapes as printed inside HLO op calls
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total operand bytes per collective kind in a (post-SPMD) HLO dump."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLLECTIVES:
+            # match the op invocation, not tuple-shaped results
+            m = re.search(rf"=\s+\S+\s+{kind}(-start|-done)?\(", s)
+            if m and not m.group(1) == "-done":
+                # operand shapes are inside the parens
+                args = s[m.end():]
+                depth, end = 1, 0
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                for dtype, dims in _SHAPE_RE.findall(args[:end]):
+                    out[kind] += _shape_bytes(dtype, dims)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All stored quantities are PER-CHIP: XLA's ``cost_analysis()`` reports
+    the partitioned (single-partition) program, and the post-SPMD HLO text
+    likewise shows one device's shard shapes. Per-chip quantity over
+    per-chip rate equals the spec's total-over-(chips × rate)."""
+    flops: float                 # per-chip HLO FLOPs
+    hbm_bytes: float             # per-chip bytes accessed
+    coll_bytes: float            # per-chip collective operand bytes
+    coll_by_kind: Dict[str, int]
+    n_chips: int
+    model_flops: float = 0.0     # 6·N·D analytic useful FLOPs (GLOBAL)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> Optional[float]:
+        if self.model_flops and self.flops:
+            return (self.model_flops / self.n_chips) / self.flops
+        return None
+
+    def row(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flop_ratio,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def from_compiled(compiled, n_chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Derive roofline terms via the scan-aware HLO cost model.
+
+    ``compiled.cost_analysis()`` counts while bodies once (scan-over-layers
+    would under-report by ~n_layers), so the primary numbers come from
+    ``hlo_cost.HloCost``, which multiplies loop bodies by XLA's own
+    known_trip_count. cost_analysis is kept as a cross-check field.
+    """
+    from repro.launch.hlo_cost import HloCost
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    c = HloCost(text).total()
+    return Roofline(flops=c.flops, hbm_bytes=c.bytes,
+                    coll_bytes=c.coll_bytes,
+                    coll_by_kind={k: int(v) for k, v in c.coll.items()},
+                    n_chips=n_chips, model_flops=model_flops)
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (6·N·D for train, 2·N·D for single forward)
+# ---------------------------------------------------------------------------
+
+
+def active_params(cfg) -> float:
+    """Parameter count with only top_k of n_experts counted (MoE)."""
+    import jax
+    from repro.launch.input_specs import params_shapes
+
+    shapes = params_shapes(cfg)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if cfg.n_experts and re.search(r"we_(in|out|gate)", name):
+            n = n * cfg.top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops_for(cfg, shape, mode: str) -> float:
+    """6·N_active·D train; 2·N·D forward; decode processes B·1 tokens."""
+    n = active_params(cfg)
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

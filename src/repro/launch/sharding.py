@@ -1,0 +1,196 @@
+"""Pattern-based FSDP × TP sharding rules for every architecture family.
+
+Scheme (DESIGN.md §5):
+  * "data" axis  — FSDP: parameters sharded on their *input-feature* dim;
+                   batch dim of activations/caches.
+  * "model" axis — TP: output-feature / head / vocab dims.
+  * "pod" axis   — pure data parallelism across pods: parameters replicated,
+                   batch sharded, gradients all-reduced over ("pod","data").
+
+Every rule degrades gracefully: an axis whose size does not divide the mesh
+axis is left unsharded (GSPMD requires divisibility).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# (regex over '/'-joined param path) -> spec for the NON-layer dims,
+# i.e. excluding the leading scan-stack axis when present.
+# "D" = FSDP/data, "M" = TP/model, None = replicate.
+_RULES = [
+    (r"embed$",                  ("M", "D")),   # (V, d): vocab-parallel
+    (r"lm_head$",                ("D", "M")),
+    (r"frame_proj$|img_proj$",   ("D", "M")),
+    (r"mask_emb$",               (None,)),
+    # attention
+    (r"w[qkv]$",                 ("D", "M")),
+    (r"wo$",                     ("M", "D")),
+    # dense mlp
+    (r"w_in$|w_gate$",           ("D", "M")),
+    (r"w_out$",                  ("M", "D")),
+    # moe (experts replicated across axis; d→FSDP, ff→TP inside each expert)
+    # router is tiny (d×E) and MUST be replicated: sharding its d over
+    # "data" would conflict with token-sharding and re-replicate all
+    # tokens inside the dispatch map (§Perf iter 4)
+    (r"router$",                 (None, None)),
+    (r"we_in$|we_gate$",         (None, "D", "M")),
+    (r"we_out$",                 (None, "M", "D")),
+    # rwkv
+    (r"wr$|wk$|wv$|wg$",         ("D", "M")),
+    (r"wc_in$",                  ("D", "M")),
+    (r"wc_out$",                 ("M", "D")),
+    (r"wA1$",                    ("D", None)),
+    (r"wA2$",                    (None, "D")),
+    (r"u$",                      (None, None)),
+    # mamba2
+    (r"conv_w$",                 (None, "M")),
+    (r"conv_b$",                 ("M",)),
+    (r"A_log$|dt_bias$|D$",      (None,)),
+    # norms / scalars / mixes — replicated
+    (r"ln\d?$|final_norm$|gn$|mix_.*$|w0$",  None),
+]
+
+
+def _axis_ok(dim: int, mesh: Mesh, name: str) -> bool:
+    return name in mesh.axis_names and dim % mesh.shape[name] == 0
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               has_layer_axis: bool) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            dims = list(shape[1:] if has_layer_axis else shape)
+            if len(spec) != len(dims):      # rank mismatch → replicate
+                return P()
+            out = []
+            for dim, s in zip(dims, spec):
+                ax = {"D": "data", "M": "model"}.get(s)
+                out.append(ax if ax and _axis_ok(dim, mesh, ax) else None)
+            if has_layer_axis:
+                out = [None] + out
+            return P(*out)
+    return P()                               # unknown leaf → replicate
+
+
+def _path_str(kp) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a params (or shape) pytree.
+
+    Stacked block params (leading n_layers axis) are detected by path
+    prefix 'blocks/'; the shared zamba2 attention block has no layer axis.
+    """
+    def spec_of(kp, leaf):
+        path = _path_str(kp)
+        has_layer = path.startswith("blocks/")
+        return _leaf_spec(path, leaf.shape, mesh, has_layer)
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_dim_spec(B: int, mesh: Mesh):
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if B % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in mesh.axis_names and B % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Shard dim0 (global batch) over ("pod","data"); rest replicated."""
+    def spec_of(leaf):
+        b = _batch_dim_spec(leaf.shape[0], mesh)
+        return P(b, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec_of, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh) -> Any:
+    """Decode-state sharding: batch dim → data; best trailing dim → model.
+
+    Layout conventions (models/model.py): KV k/v (L, B, S, Hkv, Dh);
+    mamba conv (L, B, Kw-1, C) and S (L, B, H, N, P); rwkv sx (L, B, d)
+    and S (L, B, H, Dh, Dh). Dim 1 is always batch; dim 0 the layer stack.
+    """
+    def spec_of(leaf):
+        dims = list(leaf.shape)
+        spec: list = [None] * len(dims)
+        if len(dims) >= 2:
+            spec[1] = _batch_dim_spec(dims[1], mesh)
+        # pick the LAST dim (searching backwards, skipping dims 0/1) that
+        # divides the model axis — heads for KV, channels for conv, etc.
+        if "model" in mesh.axis_names:
+            m = mesh.shape["model"]
+            for i in range(len(dims) - 1, 1, -1):
+                if dims[i] % m == 0 and dims[i] >= m:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+    return jax.tree.map(spec_of, cache_shape)
+
+
+def activation_constraint(mesh: Mesh):
+    """with_sharding_constraint hook for model activations (§Perf iter 1).
+
+    Batch dim → ("pod","data"); logits additionally shard vocab → "model"
+    (a per-chip (tokens, V) f32 logits tensor would otherwise dominate
+    HBM traffic)."""
+    def fn(x, kind):
+        b = _batch_dim_spec(x.shape[0], mesh)
+        if (kind == "logits" and "model" in mesh.axis_names
+                and x.shape[-1] % mesh.shape["model"] == 0):
+            spec = P(b, *([None] * (x.ndim - 2)), "model")
+        else:
+            spec = P(b, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return fn
+
+
+def opt_specs(param_spec_tree: Any, opt_state_shape: Any) -> Any:
+    """Optimizer moments mirror their parameter's spec; scalars replicate."""
+    def spec_of(kp, leaf):
+        path = _path_str(kp)
+        if leaf.ndim == 0 or "count" in path:
+            return P()
+        # strip the leading 'm/..' or 'v/..' prefix to find the param path
+        return _find_in(param_spec_tree, path.split("/")[1:]) or P()
+    return jax.tree_util.tree_map_with_path(spec_of, opt_state_shape)
+
+
+def _find_in(tree, parts):
+    node = tree
+    for p in parts:
+        if isinstance(node, dict) and p in node:
+            node = node[p]
+        else:
+            return None
+    return node if isinstance(node, P) else None
+
+
+def named(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+"""Foundation-model zoo: every assigned architecture as a JAX module.
+
+  config   ModelConfig / InputShape registries
+  layers   shared transformer blocks (GQA attention, MLP, MoE)
+  rwkv     RWKV6 (Finch) — attention-free data-dependent decay
+  mamba2   Mamba2 SSD — chunked scalar-decay state space
+  model    assembly: init/forward/loss/cache/features per family
+"""
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES"]

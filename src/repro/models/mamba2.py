@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block — chunked scalar-decay state-space recurrence.
+
+Per head h with state S ∈ R^{N×P} (N = ssm_state, P = ssm_head_dim):
+    S_t = a_t · S_{t-1} + (Δ_t B_t) x_tᵀ            a_t = exp(Δ_t · A_h), A_h < 0
+    y_t = C_tᵀ S_t + D_h · x_t
+
+Training/prefill uses the chunked parallel form (intra-chunk pairwise decay
+products in log space, inter-chunk state carried with ``lax.scan``) — the
+same factorization as the SSD paper, which keeps everything matmul-shaped
+for the MXU. Decode is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+DT_MIN, DT_MAX = 1e-3, 1e-1  # softplus(dt_bias + dt_raw) clamp range
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba_block(key, cfg: ModelConfig, n_layers: int, dtype):
+    d = cfg.d_model
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N * 1  # x, B, C streams share the conv (grouped)
+    L = (n_layers,)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones(L + (d,), dtype),
+        # in_proj → [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], L + (d, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], L + (cfg.conv_width, conv_dim), dtype,
+                             scale=0.5),
+        "conv_b": jnp.zeros(L + (conv_dim,), dtype),
+        # per-head decay scale / dt bias / skip
+        "A_log": jnp.zeros(L + (H,), jnp.float32),        # A = -exp(A_log)
+        "dt_bias": jnp.full(L + (H,), -4.0, jnp.float32),  # softplus ≈ 0.018
+        "D": jnp.ones(L + (H,), jnp.float32),
+        "gn": jnp.ones(L + (d_inner,), dtype),
+        "w_out": dense_init(ks[2], L + (d_inner, d), dtype),
+    }
+
+
+def ssd_chunked(x, a_log, B, C, S0, chunk: int = 256):
+    """Chunked SSD. x: (Bt,H,T,P); a_log: (Bt,H,T) per-step log decay (≤0);
+    B, C: (Bt,T,N) shared across heads; S0: (Bt,H,N,P).
+
+    Returns y (Bt,H,T,P) and the final state.
+    """
+    Bt, H, T, P = x.shape
+    N = B.shape[-1]
+    Cn = min(chunk, T)
+    if T % Cn:
+        Cn = T
+    n = T // Cn
+    xs = x.reshape(Bt, H, n, Cn, P).transpose(2, 0, 1, 3, 4)
+    als = a_log.reshape(Bt, H, n, Cn).transpose(2, 0, 1, 3)
+    Bs = B.reshape(Bt, n, Cn, N).transpose(1, 0, 2, 3)
+    Cs = C.reshape(Bt, n, Cn, N).transpose(1, 0, 2, 3)
+
+    def step(S, inp):
+        xc, alc, Bc, Cc = inp           # (Bt,H,Cn,P),(Bt,H,Cn),(Bt,Cn,N)×2
+        xc = xc.astype(jnp.float32)
+        Bc = Bc.astype(jnp.float32)
+        Cc = Cc.astype(jnp.float32)
+        cw = jnp.cumsum(alc, axis=-1)                     # Σ_{j≤t} log a
+        # intra-chunk: y_t += Σ_{s≤t} e^{cw_t - cw_s} (C_t·B_s) x_s
+        expo = cw[..., :, None] - cw[..., None, :]        # (Bt,H,Cn,Cn)
+        tri = jnp.arange(Cn)[:, None] >= jnp.arange(Cn)[None, :]
+        G = jnp.where(tri[None, None], jnp.exp(expo), 0.0)
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)           # (Bt,Cn,Cn)
+        M = G * CB[:, None]                               # (Bt,H,Cn,Cn)
+        y = jnp.einsum("bhts,bhsp->bhtp", M, xc)
+        # inter-chunk: y_t += C_t e^{cw_t} S0
+        Cdec = Cc[:, None] * jnp.exp(cw)[..., None]       # (Bt,H,Cn,N)
+        y += jnp.einsum("bhtn,bhnp->bhtp", Cdec, S)
+        # state: S' = e^{cw_last} S + Σ_s e^{cw_last - cw_s} B_s x_sᵀ
+        last = cw[..., -1:]                               # (Bt,H,1)
+        Bdec = Bc[:, None] * jnp.exp(last[..., None] - cw[..., None])
+        S_new = jnp.exp(last)[..., None] * S + \
+            jnp.einsum("bhsn,bhsp->bhnp", Bdec, xc)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(step, S0.astype(jnp.float32), (xs, als, Bs, Cs))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(Bt, H, T, P)
+    return y.astype(x.dtype), S_fin
+
+
+def ssd_decode(x, a_log, B, C, S0):
+    """Single-step SSD. x: (Bt,H,P); a_log: (Bt,H); B,C: (Bt,N)."""
+    xf = x.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    S = jnp.exp(a_log)[..., None, None] * S0 + \
+        Bf[:, None, :, None] * xf[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", Cf, S)
+    return y.astype(x.dtype), S
+
+
+def mamba_block(cfg: ModelConfig, x, w, state, *, use_cache: bool):
+    """One Mamba2 layer. x: (Bt,T,d). state: dict(conv, S) ring-free:
+    conv: (Bt, conv_width-1, conv_dim) trailing inputs; S: (Bt,H,N,P)."""
+    Bt, T, d = x.shape
+    d_inner, H, P, N = mamba_dims(cfg)
+    xn = rms_norm(x, w["ln"])
+    proj = xn @ w["w_in"]
+    z, xi, Bv, Cv, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+
+    # depthwise causal conv over [x, B, C]
+    conv_in = jnp.concatenate([xi, Bv, Cv], axis=-1)      # (Bt,T,conv_dim)
+    Kw = cfg.conv_width
+    hist = state["conv"]                                  # (Bt,Kw-1,conv_dim)
+    padded = jnp.concatenate([hist.astype(conv_in.dtype), conv_in], axis=1)
+    kern = w["conv_w"]                                    # (Kw, conv_dim)
+    conv = sum(padded[:, i:i + T] * kern[i] for i in range(Kw))
+    conv = jax.nn.silu(conv + w["conv_b"])
+    new_conv_state = padded[:, -(Kw - 1):] if Kw > 1 else hist
+    xi, Bv, Cv = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + w["dt_bias"])
+    dt = jnp.clip(dt, DT_MIN, DT_MAX)                     # (Bt,T,H)
+    A = -jnp.exp(w["A_log"])                              # (H,)
+    a_log = (dt * A).transpose(0, 2, 1)                   # (Bt,H,T)
+    xh = xi.reshape(Bt, T, H, P).transpose(0, 2, 1, 3)    # (Bt,H,T,P)
+    # fold dt into the input (standard SSD parameterization)
+    xh_dt = xh * dt.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+
+    if T == 1 and use_cache:
+        y, S = ssd_decode(xh_dt[:, :, 0], a_log[:, :, 0], Bv[:, 0], Cv[:, 0],
+                          state["S"])
+        y = y[:, :, None, :]
+    else:
+        y, S = ssd_chunked(xh_dt, a_log, Bv, Cv, state["S"],
+                           chunk=cfg.chunk_size)
+    y = y + w["D"][None, :, None, None].astype(y.dtype) * xh
+    y = y.transpose(0, 2, 1, 3).reshape(Bt, T, d_inner)
+    y = rms_norm(y, w["gn"]) * jax.nn.silu(z)
+    out = x + y @ w["w_out"]
+    return out, {"conv": new_conv_state, "S": S}
+
+
+def init_mamba_state(cfg: ModelConfig, n_layers: int, batch: int):
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, conv_dim),
+                          jnp.float32),
+        "S": jnp.zeros((n_layers, batch, H, N, P), jnp.float32),
+    }

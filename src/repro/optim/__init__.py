@@ -1,0 +1,144 @@
+"""Minimal optax-style optimizers in pure JAX.
+
+Each optimizer is an ``(init_fn, update_fn)`` pair:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+
+Provided: sgd (+momentum), adam(w), yogi (the server optimizer of FedYogi),
+and cosine / linear-warmup schedules. All state is f32 regardless of param
+dtype (master-copy style), so bf16 training remains stable.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def _f32_like(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _resolve(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": _f32_like(params) if momentum else None,
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        step_lr = _resolve(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], g32)
+            eff = (jax.tree.map(lambda m, g: momentum * m + g, mu, g32)
+                   if nesterov else mu)
+        else:
+            mu, eff = None, g32
+        updates = jax.tree.map(lambda g: -step_lr * g, eff)
+        return updates, {"mu": mu, "count": state["count"] + 1}
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _f32_like(params), "v": _f32_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        step_lr = _resolve(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], g32)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - step_lr * weight_decay * p.astype(jnp.float32)
+            return u
+        if weight_decay:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), m, v)
+        return updates, {"m": m, "v": v, "count": c}
+    return Optimizer(init, update)
+
+
+def yogi(lr, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3,
+         v0: float = 1e-6) -> Optimizer:
+    """Yogi — additive (sign-controlled) second moment. FedYogi's server opt."""
+    def init(params):
+        return {"m": _f32_like(params),
+                "v": jax.tree.map(lambda p: jnp.full(p.shape, v0,
+                                                     jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        step_lr = _resolve(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(
+            lambda v, g: v - (1 - b2) * jnp.square(g)
+            * jnp.sign(v - jnp.square(g)), state["v"], g32)
+        updates = jax.tree.map(
+            lambda m, v: -step_lr * m / (jnp.sqrt(jnp.abs(v)) + eps), m, v)
+        return updates, {"m": m, "v": v, "count": state["count"] + 1}
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def _as_f32(step):
+    return step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+
+
+def cosine_schedule(peak_lr: float, total_steps: int,
+                    warmup_steps: int = 0, floor: float = 0.0):
+    def sched(step):
+        step = _as_f32(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_schedule(peak_lr: float, total_steps: int, warmup_steps: int = 0):
+    def sched(step):
+        step = _as_f32(step)
+        warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+        lin = peak_lr * jnp.clip(
+            1.0 - (step - warmup_steps) / max(total_steps - warmup_steps, 1),
+            0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lin)
+    return sched

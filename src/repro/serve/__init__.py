@@ -1,0 +1,78 @@
+"""Serving steps: prefill (context → cache) and decode (one token against a
+``seq_len``-deep cache). These are the functions the decode_32k / long_500k
+dry-run shapes lower.
+
+The decode step is O(1) state for SSM/hybrid and O(window) KV for
+sliding-window attention — the sub-quadratic paths that make long_500k
+feasible (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int,
+                      window: int = 0) -> Callable:
+    """prefill(params, batch) -> (last-token logits, primed cache)."""
+
+    def prefill(params, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        cache = M.init_cache(cfg, B, max_seq, window)
+        S = (batch["tokens"].shape[1] if "tokens" in batch
+             else batch["frames"].shape[1])
+        n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
+        logits, _, cache = M.forward(
+            cfg, params, batch, cache=cache,
+            positions=jnp.arange(S + n_img), window=window, use_cache=True)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, window: int = 0) -> Callable:
+    """decode(params, cache, tokens (B,1), pos scalar) -> (logits, cache).
+
+    ``pos`` is the absolute position of the new token (dynamic scalar).
+    """
+    assert cfg.has_decode, f"{cfg.name} is encoder-only: no decode step"
+
+    def decode(params, cache, tokens, pos):
+        logits, _, cache = M.forward(
+            cfg, params, {"tokens": tokens}, cache=cache,
+            positions=pos[None], window=window, use_cache=True)
+        return logits[:, -1], cache
+
+    return decode
+
+
+def make_encode_step(cfg: ModelConfig) -> Callable:
+    """Encoder-only 'serving': one full bidirectional encode."""
+
+    def encode(params, batch):
+        logits, _, _ = M.forward(cfg, params, batch)
+        return logits
+
+    return encode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                    n_new: int, max_seq: int, window: int = 0):
+    """Host-side autoregressive loop (prefill + n_new decode steps)."""
+    prefill = jax.jit(make_prefill_step(cfg, max_seq, window))
+    decode = jax.jit(make_decode_step(cfg, window))
+    logits, cache = prefill(params, {"tokens": prompt})
+    S = prompt.shape[1] + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None]
+    for i in range(n_new):
+        toks.append(tok)
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(S + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,128 @@
+"""Continuous-batching inference server (CPU-testable, mesh-ready).
+
+Fixed pool of B slots; each slot owns one request's cache/state. Admission
+prefize a prompt into a free slot; every ``step()`` advances ALL active
+slots with ONE vmapped decode (per-slot absolute positions — requests of
+different lengths coexist). Greedy sampling; slots free on EOS/max-len.
+
+This is the ``serve a small model with batched requests`` driver: requests
+join and leave the batch without ever stalling each other, the same
+scheduling structure vLLM-style servers use (minus paging — the KV pool is
+a dense per-slot buffer, which is the TPU-friendly layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray           # (S,)
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    n_slots: int = 4
+    max_seq: int = 256
+    window: int = 0
+    eos_id: int = -1              # -1: never stop early
+
+
+class BatchedServer:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        B, S = scfg.n_slots, scfg.max_seq
+
+        # per-slot cache: leading slot axis via vmap over single-sequence
+        # caches (B=1 inside); positions are PER SLOT.
+        self._empty_slot_cache = M.init_cache(cfg, 1, S, scfg.window)
+        self.cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (B,) + a.shape).copy(),
+            self._empty_slot_cache)
+        self.positions = jnp.zeros((B,), jnp.int32)    # next position
+        self.last_tok = jnp.zeros((B, 1, 1), jnp.int32)  # per-slot (1,1)
+        self.active: List[Optional[Request]] = [None] * B
+
+        from repro import serve as _serve
+        prefill1 = _serve.make_prefill_step(cfg, S, window=scfg.window)
+        decode1 = _serve.make_decode_step(cfg, window=scfg.window)
+        self._prefill = jax.jit(prefill1)
+
+        def decode_slot(params, cache, tok, pos):
+            return decode1(params, cache, tok, pos)
+        self._decode_all = jax.jit(jax.vmap(
+            decode_slot, in_axes=(None, 0, 0, 0)))
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request into a free slot (prefill now). False if full."""
+        slots = self.free_slots()
+        if not slots:
+            return False
+        i = slots[0]
+        logits, cache1 = self._prefill(self.params, {
+            "tokens": req.prompt[None, :]})
+        self.cache = jax.tree.map(
+            lambda all_c, c1: all_c.at[i].set(c1), self.cache, cache1)
+        n_img = self.cfg.n_img_tokens if self.cfg.family == "vlm" else 0
+        self.positions = self.positions.at[i].set(
+            req.prompt.shape[0] + n_img)
+        first = jnp.argmax(logits[0])
+        self.last_tok = self.last_tok.at[i, 0, 0].set(
+            first.astype(jnp.int32))
+        req.out.append(int(first))
+        self.active[i] = req
+        return True
+
+    def step(self) -> int:
+        """One decode step for every active slot. Returns #active."""
+        if all(r is None for r in self.active):
+            return 0
+        logits, self.cache = self._decode_all(
+            self.params, self.cache, self.last_tok, self.positions)
+        # logits: (slots, 1, V) — per-slot last-token logits
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        self.positions = self.positions + jnp.asarray(
+            [r is not None for r in self.active], jnp.int32)
+        self.last_tok = nxt[:, None, None]
+        n_active = 0
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.out.append(tok)
+            if (len(r.out) >= r.max_new
+                    or tok == self.scfg.eos_id
+                    or int(self.positions[i]) >= self.scfg.max_seq - 1):
+                r.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve a request list to completion with continuous admission."""
+        pending = list(requests)
+        while pending or any(r is not None for r in self.active):
+            while pending and self.free_slots():
+                if not self.submit(pending[0]):
+                    break
+                pending.pop(0)
+            self.step()
+        return {r.rid: r.out for r in requests}

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the host's real device count (1 CPU); only launch/dryrun.py fakes 512."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, msg=""):
+    for leaf in jax.tree.leaves(tree):
+        assert bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32)))), \
+            f"non-finite values {msg}"

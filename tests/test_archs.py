@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned config runs one forward + one train step on CPU, asserting output
+shapes and finiteness. Decode-vs-full-forward consistency per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim, serve, train
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, key, B=2, S=24, train_mode=True):
+    ks = jax.random.split(key, 4)
+    if cfg.family == "encoder":
+        b = {"frames": jax.random.normal(ks[0], (B, S, cfg.frame_embed_dim))}
+        if train_mode:
+            b["mask"] = jnp.zeros((B, S), bool).at[:, ::4].set(True)
+            b["targets"] = jax.random.randint(ks[1], (B, S), 0,
+                                              cfg.vocab_size)
+        return b
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["img"] = jax.random.normal(ks[2], (B, cfg.n_img_tokens,
+                                             cfg.img_embed_dim))
+    if train_mode:
+        b["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, key, arch):
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, key)
+        B, S = 2, 24
+        batch = make_batch(cfg, key, B, S, train_mode=False)
+        logits, aux, _ = M.forward(cfg, params, batch)
+        S_out = S + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        assert logits.shape == (B, S_out, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        feats = M.features(cfg, params, batch)
+        assert feats.shape == (B, cfg.d_model)
+        assert bool(jnp.all(jnp.isfinite(feats)))
+
+    def test_one_train_step(self, key, arch):
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, key)
+        opt = optim.adam(1e-3)
+        state = opt.init(params)
+        step = jax.jit(train.make_train_step(cfg, opt))
+        batch = make_batch(cfg, key)
+        p2, s2, metrics = step(params, state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        # params actually moved
+        delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                          - b.astype(jnp.float32))))
+                    for a, b in zip(jax.tree.leaves(params),
+                                    jax.tree.leaves(p2)))
+        assert delta > 0
+
+    def test_loss_decreases_few_steps(self, key, arch):
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, key)
+        opt = optim.adam(3e-3)
+        state = opt.init(params)
+        step = jax.jit(train.make_train_step(cfg, opt))
+        batch = make_batch(cfg, key)
+        losses = []
+        for _ in range(5):
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+
+
+DECODE_ARCHS = [a for a in ALL_ARCHS
+                if get_config(a).has_decode]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_full_forward(key, arch):
+    """prefill(S) + decode(1) == forward(S+1) at the last position."""
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, remat=False, dtype="float32",
+                              capacity_factor=8.0)  # dropless MoE
+    params = M.init_params(cfg, key)
+    B, S = 2, 13
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full_batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        img = jax.random.normal(key, (B, cfg.n_img_tokens,
+                                      cfg.img_embed_dim))
+        full_batch["img"] = img
+    logits_full, _, _ = M.forward(cfg, params, full_batch)
+    n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    prefill = serve.make_prefill_step(cfg, S + 1 + n_img)
+    decode = serve.make_decode_step(cfg)
+    pb = {"tokens": tokens[:, :S]}
+    if cfg.family == "vlm":
+        pb["img"] = img
+    _, cache = prefill(params, pb)
+    ld, _ = decode(params, cache, tokens[:, S:],
+                   jnp.asarray(S + n_img, jnp.int32))
+    np.testing.assert_allclose(np.asarray(ld),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_buffer(key):
+    """Windowed decode with a ring-buffer cache matches windowed full
+    forward — the long_500k mechanism for dense archs."""
+    cfg = get_config("yi-34b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, dtype="float32")
+    W = 8
+    params = M.init_params(cfg, key)
+    B, S = 1, 21
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    logits_full, _, _ = M.forward(cfg, params, {"tokens": tokens}, window=W)
+    prefill = serve.make_prefill_step(cfg, S + 1, window=W)
+    decode = serve.make_decode_step(cfg, window=W)
+    _, cache = prefill(params, {"tokens": tokens[:, :S]})
+    assert cache["k"].shape[2] == W  # ring buffer, not full length
+    ld, _ = decode(params, cache, tokens[:, S:], jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(ld),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_greedy_generate_runs(key):
+    cfg = get_config("granite-3-2b").reduced()
+    params = M.init_params(cfg, key)
+    prompt = jax.random.randint(key, (2, 6), 0, cfg.vocab_size)
+    out = serve.greedy_generate(cfg, params, prompt, 5, max_seq=32)
+    assert out.shape == (2, 5)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+def test_moe_aux_loss_nonzero(key):
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    params = M.init_params(cfg, key)
+    batch = make_batch(cfg, key, train_mode=False)
+    _, aux, _ = M.forward(cfg, params, batch)
+    assert float(aux) > 0.0
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge")
+    assert not cfg.has_decode
+    with pytest.raises(AssertionError):
+        serve.make_decode_step(cfg)
+
+
+def test_long_context_support_flags():
+    assert get_config("rwkv6-3b").supports_long_context
+    assert get_config("zamba2-7b").supports_long_context
+    # dense archs qualify via the sliding-window serving variant
+    from repro.launch.input_specs import long_window
+    assert long_window(get_config("yi-34b")) == 8192
+    assert long_window(get_config("grok-1-314b")) == 8192

@@ -1,0 +1,163 @@
+"""Decentralized chain (§4.2), DP mechanism (Thm 4.1), theory bounds
+(Thm 6.1 / Eq. 26) and the reconstruction-attack ordering (§6.4)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data as D
+from repro.core import decentralized as DC
+from repro.core import dp as DP
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+from repro.core import reconstruction as RA
+from repro.core import theory as T
+
+N_CLASSES = 6
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    dcfg = D.DatasetConfig(n_classes=N_CLASSES, n_per_class=120,
+                           input_dim=DIM, class_sep=2.0)
+    return (*D.make_dataset(dcfg), *D.make_dataset(dcfg, split=1))
+
+
+@pytest.fixture(scope="module")
+def fp_cfg():
+    return FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=2, cov_type="diag", n_iter=12),
+        head=H.HeadConfig(n_steps=250, lr=3e-3))
+
+
+class TestDecentralized:
+    def test_chain_accumulates_knowledge(self, key, dataset, fp_cfg):
+        """Figure 6: accuracy improves along the chain when each client
+        holds a disjoint label slice — late clients know early labels only
+        through the passed GMMs."""
+        x, y, xt, yt = dataset
+        clients = [(x[y == c], y[y == c]) for c in range(N_CLASSES)]
+        msgs, infos = DC.run_chain(key, clients, N_CLASSES, fp_cfg)
+        accs = [float(H.accuracy(i["head"], xt, yt)) for i in infos]
+        assert accs[-1] > accs[0] + 0.3, accs
+        assert accs[-1] > 0.75, accs
+        # final message carries every class
+        assert int((msgs[-1].counts > 0).sum()) == N_CLASSES
+
+    def test_single_client_chain_is_fedpft(self, key, dataset, fp_cfg):
+        x, y, xt, yt = dataset
+        msgs, infos = DC.run_chain(key, [(x, y)], N_CLASSES, fp_cfg)
+        acc = float(H.accuracy(infos[0]["head"], xt, yt))
+        assert acc > 0.8
+
+
+class TestDP:
+    def test_noise_scale_formula(self):
+        n, eps, delta = 500, 1.0, 1e-3
+        assert abs(DP.noise_scale(n, eps, delta)
+                   - 4.0 / (n * eps) * math.sqrt(5 * math.log(4 / delta))) \
+            < 1e-12
+
+    def test_psd_projection(self, key):
+        a = jax.random.normal(key, (8, 8))
+        sym = a + a.T - 3.0 * jnp.eye(8)
+        proj = DP.project_psd(sym, floor=0.0)
+        eig = np.linalg.eigvalsh(np.asarray(proj))
+        assert (eig >= -1e-5).all()
+        # projection is idempotent on PSD inputs
+        psd = a @ a.T
+        np.testing.assert_allclose(np.asarray(DP.project_psd(psd)),
+                                   np.asarray(psd), rtol=1e-4, atol=1e-4)
+
+    def test_privatize_preserves_utility_large_n(self, key):
+        """With many samples the mechanism's noise vanishes (σ ∝ 1/n)."""
+        mu = jnp.ones((DIM,)) * 0.1
+        cov = 0.05 * jnp.eye(DIM)
+        mu_t, cov_t = DP.privatize_gaussian(key, mu, cov, n=100000,
+                                            cfg=DP.DPConfig(epsilon=1.0))
+        assert float(jnp.max(jnp.abs(mu_t - mu))) < 0.01
+        assert float(jnp.max(jnp.abs(cov_t - cov))) < 0.01
+
+    def test_dp_fedpft_end_to_end(self, key, dataset):
+        """DP-FedPFT (K=1 full cov, normalized features) stays usable at
+        ε=1 and degrades vs non-private — but beats chance."""
+        x, y, xt, yt = dataset
+        cfg = FP.FedPFTConfig(
+            gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
+            head=H.HeadConfig(n_steps=800, lr=3e-2),
+            normalize_features=True)
+        msg = FP.client_update(key, x, y, N_CLASSES, cfg)
+        priv = DP.privatize_classwise(key, msg.gmms, msg.counts,
+                                      DP.DPConfig(epsilon=1.0,
+                                                  delta=1.0 / 120))
+        msg.gmms = jax.device_get(priv)
+        head, _ = FP.server_aggregate(key, [msg], N_CLASSES, cfg)
+        xn = xt / jnp.maximum(jnp.linalg.norm(xt, axis=-1, keepdims=True),
+                              1.0)
+        acc = float(H.accuracy(head, xn, yt))
+        assert acc > 2.0 / N_CLASSES, acc
+
+
+class TestTheory:
+    def test_entropy_knn_gaussian(self, key):
+        """KL 1-NN estimator ≈ analytic Gaussian entropy."""
+        d = 4
+        x = jax.random.normal(key, (2000, d)) * 2.0
+        h = float(T.entropy_knn(x, dequantize_scale=0.0))
+        h_true = 0.5 * d * math.log(2 * math.pi * math.e * 4.0)
+        assert abs(h - h_true) < 0.3, (h, h_true)
+
+    def test_theorem61_bound_holds(self, key, dataset, fp_cfg):
+        """Empirically: client 0-1 loss ≤ RHS of Theorem 6.1."""
+        x, y, xt, yt = dataset
+        msg = FP.client_update(key, x, y, N_CLASSES, fp_cfg)
+        head, info = FP.server_aggregate(key, [msg], N_CLASSES, fp_cfg)
+        sf, sl = info["synthetic_feats"], info["synthetic_labels"]
+        synth_loss, _ = H.classwise_01_loss(head, sf, sl, N_CLASSES)
+        H_c = jnp.stack([
+            T.entropy_knn(x[y == c], key=key) for c in range(N_CLASSES)])
+        counts = jnp.asarray(msg.counts, jnp.float32)
+        rhs = float(T.theorem61_bound(synth_loss, H_c,
+                                      jnp.asarray(msg.logliks), counts))
+        lhs = 1.0 - float(H.accuracy(head, x, y))
+        assert lhs <= rhs + 1e-6, (lhs, rhs)
+
+    def test_accuracy_lower_bound_consistent(self):
+        a = jnp.asarray([0.95, 0.9])
+        Hc = jnp.asarray([1.0, 1.0])
+        L = jnp.asarray([0.8, 0.9])
+        w = jnp.asarray([1.0, 1.0])
+        lb = float(T.accuracy_lower_bound(a, Hc, L, w))
+        assert lb <= float(jnp.mean(a))
+
+    def test_head_bytes(self):
+        assert T.head_bytes(512, 100) == (100 * 512 + 100) * 2
+
+
+class TestReconstruction:
+    def test_raw_features_leak_more_than_gmm(self, key):
+        """§6.4 ordering: raw > GMM > DP in reconstruction quality."""
+        dcfg = D.DatasetConfig(n_classes=4, n_per_class=400, input_dim=DIM,
+                               class_sep=2.0)
+        x_att, y_att = D.make_dataset(dcfg)                  # attacker set
+        x_def, y_def = D.make_dataset(dcfg, split=1)         # defender set
+        # "features" = an over-complete mildly-nonlinear embedding — like a
+        # real foundation model, it preserves enough per-sample detail that
+        # raw features are invertible (the paper's premise, Fig. 8)
+        W = jax.random.normal(key, (DIM, 48)) / jnp.sqrt(DIM)
+        f = lambda z: jnp.tanh(0.3 * z @ W)
+        atk = RA.fit_inversion(f(x_att), x_att, RA.AttackConfig())
+        m_raw = RA.evaluate_attack(atk, f(x_def), x_def, RA.AttackConfig())
+        # GMM-sampled features
+        gm, cnt, _ = G.fit_classwise_gmms(
+            key, f(x_def), y_def, 4, G.GMMConfig(n_components=2, n_iter=10))
+        samp = jnp.concatenate([
+            G.sample(key, jax.tree.map(lambda a: a[c], gm), 200, "diag")
+            for c in range(4)])
+        m_gmm = RA.evaluate_attack(atk, samp, x_def, RA.AttackConfig())
+        assert m_raw["mse_all"] < m_gmm["mse_all"]
+        assert m_raw["cosine_all"] > m_gmm["cosine_all"]

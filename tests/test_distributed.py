@@ -1,0 +1,55 @@
+"""shard_map FedPFT transfer: numerical equivalence with the host-level
+pipeline (single-shard mesh on CPU; the 16-shard wire measurement runs as
+a slow subprocess test in test_system.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data as D
+from repro.core import distributed as DF
+from repro.core import gmm as G
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
+def test_transfer_matches_direct_fit(key, mesh):
+    dcfg = D.DatasetConfig(n_classes=4, n_per_class=60, input_dim=8)
+    x, y = D.make_dataset(dcfg)
+    I, N = 2, 120
+    feats = x[: I * N].reshape(I, N, 8)
+    labels = y[: I * N].reshape(I, N)
+    cfg = G.GMMConfig(n_components=2, cov_type="diag", n_iter=8)
+    with mesh:
+        wire, counts = DF.fedpft_transfer(mesh, feats, labels, 4, cfg)
+    assert wire["mu"].shape == (I, 4, 2, 8)
+    assert counts.shape == (I, 4)
+    # same per-client fit as the sequential path (same seeds)
+    for i in range(I):
+        gmms, cnt, _ = G.fit_classwise_gmms(
+            jax.random.PRNGKey(i), feats[i], labels[i], 4, cfg)
+        packed = G.pack_wire(gmms, "diag")
+        np.testing.assert_allclose(
+            np.asarray(wire["mu"][i], np.float32),
+            np.asarray(packed["mu"], np.float32), rtol=1e-2, atol=1e-2)
+        np.testing.assert_array_equal(np.asarray(counts[i]),
+                                      np.asarray(cnt))
+
+
+def test_raw_transfer_roundtrip(key, mesh):
+    feats = jax.random.normal(key, (2, 16, 8))
+    labels = jax.random.randint(key, (2, 16), 0, 4)
+    with mesh:
+        f, y = DF.raw_feature_transfer(mesh, feats, labels)
+    assert f.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(f, np.float32),
+                               np.asarray(feats), rtol=1e-2, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(labels))
+
+
+def test_expected_wire_bytes_formula():
+    assert DF.expected_wire_bytes("diag", 64, 5, 8, 1) == \
+        G.comm_bytes("diag", 64, 5, 8, 2)

@@ -1,0 +1,199 @@
+"""GMM EM: numpy-oracle equivalence, mixture recovery, sampling statistics,
+wire format round-trip, and the exact Eqs. 9-11 communication formulas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gmm as G
+
+
+def _numpy_em_diag(x, w, K, n_iter, reg, mu0):
+    """Textbook weighted EM with diagonal covariance (oracle)."""
+    N, d = x.shape
+    pi = np.full(K, 1.0 / K)
+    mu = mu0.copy()
+    wsum = w.sum()
+    mean = (w @ x) / wsum
+    var = np.tile((w @ (x - mean) ** 2) / wsum + reg, (K, 1))
+    for _ in range(n_iter):
+        # E
+        logp = np.zeros((N, K))
+        for k in range(K):
+            logp[:, k] = (-0.5 * (d * np.log(2 * np.pi)
+                                  + np.sum(np.log(var[k]))
+                                  + np.sum((x - mu[k]) ** 2 / var[k], -1))
+                          + np.log(max(pi[k], 1e-20)))
+        m = logp.max(-1, keepdims=True)
+        r = np.exp(logp - m)
+        r /= r.sum(-1, keepdims=True)
+        r *= w[:, None]
+        # M
+        nk = r.sum(0)
+        pi = nk / max(nk.sum(), 1e-12)
+        nk = np.maximum(nk, 1e-12)
+        mu = (r.T @ x) / nk[:, None]
+        var = (r.T @ (x ** 2)) / nk[:, None] - mu ** 2 + reg
+    return pi, mu, var
+
+
+def _mixture_data(seed=0, N=600, d=6, K=3, sep=4.0):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(K, d) * sep
+    comp = rng.randint(0, K, N)
+    x = centers[comp] + 0.5 * rng.randn(N, d)
+    return jnp.asarray(x, jnp.float32), centers, comp
+
+
+class TestEMCorrectness:
+    def test_matches_numpy_oracle_diag(self, key):
+        x, _, _ = _mixture_data()
+        w = jnp.ones(x.shape[0])
+        cfg = G.GMMConfig(n_components=3, cov_type="diag", n_iter=15,
+                          kmeans_iter=0, reg=1e-4)
+        g, _ = G.fit_gmm(key, x, w, cfg)
+        # oracle seeded from the SAME kmeans init (kmeans_iter=0 → seeds)
+        mu0 = np.asarray(G._kmeans_init(key, x, w, cfg))
+        pi, mu, var = _numpy_em_diag(np.asarray(x), np.ones(x.shape[0]), 3,
+                                     15, 1e-4, mu0)
+        np.testing.assert_allclose(np.sort(np.asarray(g["pi"])),
+                                   np.sort(pi), atol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(g["mu"])[np.argsort(np.asarray(g["pi"]))],
+            mu[np.argsort(pi)], atol=1e-2)
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_recovers_mixture(self, key, cov):
+        x, centers, _ = _mixture_data()
+        cfg = G.GMMConfig(n_components=3, cov_type=cov, n_iter=40)
+        g, ll = G.fit_gmm(key, x, jnp.ones(x.shape[0]), cfg)
+        dist = jnp.linalg.norm(g["mu"][:, None] - centers[None], axis=-1)
+        assert float(jnp.max(jnp.min(dist, axis=0))) < 0.5
+        assert np.isfinite(float(ll))
+
+    def test_weights_mask_rows(self, key):
+        x, _, comp = _mixture_data()
+        w0 = jnp.asarray(comp == 0, jnp.float32)
+        cfg = G.GMMConfig(n_components=2, cov_type="diag", n_iter=25)
+        g, _ = G.fit_gmm(key, x, w0, cfg)
+        # fitted only on component-0 rows: means must sit near center 0
+        x0 = np.asarray(x)[comp == 0]
+        assert float(jnp.max(jnp.linalg.norm(
+            g["mu"] - jnp.asarray(x0.mean(0)), axis=-1))) < 3.0
+
+    def test_loglik_increases(self, key):
+        x, _, _ = _mixture_data()
+        w = jnp.ones(x.shape[0])
+        lls = []
+        for it in (1, 5, 30):
+            _, ll = G.fit_gmm(key, x, w,
+                              G.GMMConfig(n_components=3, n_iter=it))
+            lls.append(float(ll))
+        assert lls[0] <= lls[1] + 1e-3 and lls[1] <= lls[2] + 1e-3
+
+
+class TestClasswise:
+    def test_vmap_over_classes(self, key):
+        x, centers, comp = _mixture_data()
+        gmms, counts, lls = G.fit_classwise_gmms(
+            key, x, jnp.asarray(comp), 3,
+            G.GMMConfig(n_components=2, cov_type="diag", n_iter=20))
+        assert gmms["mu"].shape == (3, 2, x.shape[1])
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.bincount(comp, minlength=3))
+        for c in range(3):
+            err = float(jnp.min(jnp.linalg.norm(
+                gmms["mu"][c] - centers[c], axis=-1)))
+            assert err < 1.0, (c, err)
+
+    def test_negative_labels_are_padding(self, key):
+        x, _, comp = _mixture_data()
+        labels = jnp.asarray(comp).at[:100].set(-1)
+        _, counts, _ = G.fit_classwise_gmms(
+            key, x, labels, 3, G.GMMConfig(n_components=2, n_iter=5))
+        assert int(counts.sum()) == x.shape[0] - 100
+
+
+class TestSampling:
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_sample_statistics(self, key, cov):
+        d = 4
+        mu = jnp.asarray([[0.0] * d, [10.0] * d])
+        if cov == "full":
+            covm = jnp.tile(jnp.eye(d)[None] * 0.25, (2, 1, 1))
+        elif cov == "diag":
+            covm = jnp.full((2, d), 0.25)
+        else:
+            covm = jnp.full((2,), 0.25)
+        g = {"pi": jnp.asarray([0.3, 0.7]), "mu": mu, "cov": covm}
+        s = G.sample(key, g, 20000, cov)
+        frac_hi = float(jnp.mean(s[:, 0] > 5.0))
+        assert abs(frac_hi - 0.7) < 0.03
+        hi = s[s[:, 0] > 5.0]
+        assert abs(float(jnp.var(hi[:, 1])) - 0.25) < 0.05
+
+
+class TestWireAndCost:
+    def test_eqs_9_10_11_exact(self):
+        d, K, C = 512, 10, 100
+        assert G.n_parameters("full", d, K, C) == \
+            (2 * d + (d * d - d) // 2 + 1) * K * C
+        assert G.n_parameters("diag", d, K, C) == (2 * d + 1) * K * C
+        assert G.n_parameters("spher", d, K, C) == (d + 2) * K * C
+        # §6.3: spher K=1 == classifier-head cost Cd+C (up to the +2C π/σ)
+        assert abs(G.n_parameters("spher", d, 1, C) - (C * d + C)) <= C
+
+    def test_comm_bytes_16bit(self):
+        assert G.comm_bytes("diag", 64, 5, 10) == \
+            G.n_parameters("diag", 64, 5, 10) * 2
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_wire_roundtrip(self, key, cov):
+        x, _, _ = _mixture_data(d=6)
+        g, _ = G.fit_gmm(key, x, jnp.ones(x.shape[0]),
+                         G.GMMConfig(n_components=3, cov_type=cov, n_iter=5))
+        packed = G.pack_wire(g, cov)
+        unpacked = G.unpack_wire(packed, cov, 6)
+        np.testing.assert_allclose(np.asarray(unpacked["mu"]),
+                                   np.asarray(g["mu"]), rtol=0.02, atol=0.05)
+        if cov == "full":
+            cov_u = np.asarray(unpacked["cov"])
+            np.testing.assert_allclose(cov_u, np.swapaxes(cov_u, -1, -2))
+
+    def test_wire_param_count_matches_eq(self, key):
+        """The bf16 pytree that crosses the wire carries exactly the scalar
+        count of Eqs. 9-11."""
+        d, K = 6, 3
+        x, _, _ = _mixture_data(d=d)
+        for cov in ("full", "diag", "spher"):
+            g, _ = G.fit_gmm(key, x, jnp.ones(x.shape[0]),
+                             G.GMMConfig(n_components=K, cov_type=cov,
+                                         n_iter=2))
+            packed = G.pack_wire(g, cov)
+            n = sum(a.size for a in jax.tree.leaves(packed))
+            assert n == G.n_parameters(cov, d, K, 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(N=st.integers(20, 200), d=st.integers(1, 16), K=st.integers(1, 5),
+       cov=st.sampled_from(["diag", "spher", "full"]))
+def test_em_properties(N, d, K, cov):
+    """Property: for any shape, EM returns valid mixture parameters."""
+    key = jax.random.PRNGKey(N * 131 + d * 7 + K)
+    x = jax.random.normal(key, (N, d))
+    g, ll = G.fit_gmm(key, x, jnp.ones(N),
+                      G.GMMConfig(n_components=K, cov_type=cov, n_iter=5))
+    pi = np.asarray(g["pi"])
+    assert abs(pi.sum() - 1.0) < 1e-4 and (pi >= -1e-6).all()
+    assert np.isfinite(np.asarray(g["mu"])).all()
+    covv = np.asarray(g["cov"])
+    assert np.isfinite(covv).all()
+    if cov == "diag":
+        assert (covv > 0).all()
+    if cov == "spher":
+        assert (covv > 0).all()
+    if cov == "full":
+        eig = np.linalg.eigvalsh(covv)
+        assert (eig > -1e-4).all()
+    assert np.isfinite(float(ll))

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+plus hypothesis property tests (per the kernel contract in DESIGN.md §8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm_estep import estep
+
+
+def _estep_inputs(key, N, K, d, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (N, d), dtype)
+    mu = jax.random.normal(ks[1], (K, d), dtype)
+    var = jax.nn.softplus(jax.random.normal(ks[2], (K, d))) + 0.1
+    pi = jax.nn.softmax(jax.random.normal(ks[3], (K,)))
+    return x, mu, var.astype(dtype), pi
+
+
+class TestGmmEstepKernel:
+    @pytest.mark.parametrize("N,K,d", [
+        (32, 1, 4), (100, 3, 8), (257, 10, 64), (512, 50, 512),
+        (33, 7, 17), (128, 128, 128), (1000, 5, 300),
+    ])
+    def test_shape_sweep(self, key, N, K, d):
+        x, mu, var, pi = _estep_inputs(key, N, K, d)
+        out = estep(x, mu, var, pi)
+        exp = ref.estep_ref(x, mu, var, pi)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=3e-4, atol=3e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, key, dtype):
+        x, mu, var, pi = _estep_inputs(key, 64, 4, 32, dtype)
+        out = estep(x, mu, var, pi)
+        exp = ref.estep_ref(x, mu, var, pi)
+        tol = 3e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_spherical_broadcast(self, key):
+        x, mu, _, pi = _estep_inputs(key, 50, 3, 16)
+        var_s = jnp.asarray([0.5, 1.0, 2.0])
+        out = estep(x, mu, jnp.broadcast_to(var_s[:, None], (3, 16)), pi)
+        exp = ref.estep_ref(x, mu, jnp.broadcast_to(var_s[:, None], (3, 16)),
+                            pi)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_block_shapes(self, key):
+        x, mu, var, pi = _estep_inputs(key, 300, 40, 96)
+        exp = ref.estep_ref(x, mu, var, pi)
+        for bn, bk in [(64, 16), (128, 128), (256, 8)]:
+            out = estep(x, mu, var, pi, block_n=bn, block_k=bk)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                       rtol=3e-4, atol=3e-4)
+
+
+class TestFlashAttentionKernel:
+    CASES = [
+        # B, H, Hkv, Sq, Sk, D, causal, window, prefix
+        (1, 4, 4, 64, 64, 32, True, 0, 0),
+        (2, 8, 2, 128, 128, 64, True, 0, 0),      # GQA
+        (1, 4, 2, 100, 100, 32, True, 0, 0),      # ragged
+        (1, 2, 2, 256, 256, 32, True, 64, 0),     # sliding window
+        (1, 4, 1, 64, 256, 32, True, 0, 0),       # MQA, continued prefill
+        (1, 2, 2, 96, 96, 32, False, 0, 0),       # bidirectional (encoder)
+        (1, 4, 4, 128, 128, 32, True, 0, 16),     # VLM image prefix
+        (2, 4, 2, 1, 192, 64, True, 0, 0),        # decode: 1 query
+        (1, 2, 2, 128, 128, 16, True, 32, 8),     # window + prefix
+    ]
+
+    @pytest.mark.parametrize("B,H,Hkv,Sq,Sk,D,causal,window,prefix", CASES)
+    def test_matches_oracle(self, key, B, H, Hkv, Sq, Sk, D, causal,
+                            window, prefix):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, Sq, D))
+        k = jax.random.normal(ks[1], (B, Hkv, Sk, D))
+        v = jax.random.normal(ks[2], (B, Hkv, Sk, D))
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              prefix=prefix)
+        exp = ref.attention_ref(q, k, v, causal=causal, window=window,
+                                prefix=prefix)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self, key):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 32), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 64, 32), jnp.bfloat16)
+        out = flash_attention(q, k, v)
+        exp = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_block_shapes(self, key):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 160, 32))
+        k = jax.random.normal(ks[1], (1, 2, 160, 32))
+        v = jax.random.normal(ks[2], (1, 2, 160, 32))
+        exp = ref.attention_ref(q, k, v)
+        for bq, bk in [(32, 32), (64, 128), (160, 40)]:
+            out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                       rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(N=st.integers(4, 150), K=st.integers(1, 20), d=st.integers(1, 64))
+def test_estep_property(N, K, d):
+    """Property: kernel == oracle for arbitrary shapes, and responsibilities
+    normalize (logsumexp over K of (logp − log π) ≥ per-component logp)."""
+    key = jax.random.PRNGKey(N * 1001 + K * 31 + d)
+    x, mu, var, pi = _estep_inputs(key, N, K, d)
+    out = np.asarray(estep(x, mu, var, pi))
+    exp = np.asarray(ref.estep_ref(x, mu, var, pi))
+    np.testing.assert_allclose(out, exp, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(Sq=st.integers(1, 96), extra=st.integers(0, 64),
+       H=st.sampled_from([1, 2, 4]), G=st.sampled_from([1, 2]),
+       window=st.sampled_from([0, 16]))
+def test_flash_property(Sq, extra, H, G, window):
+    """Property: online-softmax output == dense-softmax oracle, any Sq/Sk,
+    GQA grouping, optional window. Rows are convex combinations of V."""
+    if H % G:
+        return
+    Sk = Sq + extra
+    key = jax.random.PRNGKey(Sq * 7 + extra * 3 + H + window)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, H, Sq, 16))
+    k = jax.random.normal(ks[1], (1, H // G, Sk, 16))
+    v = jax.random.normal(ks[2], (1, H // G, Sk, 16))
+    out = np.asarray(flash_attention(q, k, v, window=window))
+    exp = np.asarray(ref.attention_ref(q, k, v, window=window))
+    np.testing.assert_allclose(out, exp, rtol=3e-3, atol=3e-3)
+    assert np.abs(out).max() <= np.abs(np.asarray(v)).max() + 1e-3
+
+
+def test_ops_dispatch(key):
+    """ops.use_pallas flips backends; results agree."""
+    x, mu, var, pi = _estep_inputs(key, 40, 3, 8)
+    ops.use_pallas(False)
+    a = ops.gmm_estep(x, mu, var, pi)
+    ops.use_pallas(True)
+    b = ops.gmm_estep(x, mu, var, pi)
+    ops.use_pallas(False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-4, atol=3e-4)

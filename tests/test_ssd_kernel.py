@@ -1,0 +1,73 @@
+"""Mamba2 SSD Pallas kernel: sweeps vs the chunked oracle AND the oracle
+vs the naive per-token recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd import ssd
+from repro.models.mamba2 import ssd_chunked, ssd_decode
+
+
+def _inputs(key, Bt, H, T, N, P):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (Bt, H, T, P))
+    al = -0.2 * jax.nn.softplus(jax.random.normal(ks[1], (Bt, H, T)))
+    B = jax.random.normal(ks[2], (Bt, T, N))
+    C = jax.random.normal(ks[3], (Bt, T, N))
+    s0 = jnp.zeros((Bt, H, N, P))
+    return x, al, B, C, s0
+
+
+@pytest.mark.parametrize("Bt,H,T,N,P,chunk", [
+    (1, 2, 64, 8, 16, 32), (2, 3, 128, 16, 32, 64), (1, 1, 32, 4, 8, 16),
+    (2, 1, 96, 64, 64, 32),
+])
+def test_kernel_matches_oracle(key, Bt, H, T, N, P, chunk):
+    x, al, B, C, s0 = _inputs(key, Bt, H, T, N, P)
+    y, sf = ssd(x, al, B, C, s0, chunk=chunk)
+    ye, sfe = ssd_chunked(x, al, B, C, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfe),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_oracle_matches_naive(key):
+    Bt, H, T, N, P = 1, 2, 24, 4, 8
+    x, al, B, C, s0 = _inputs(key, Bt, H, T, N, P)
+    y_c, sf_c = ssd_chunked(x, al, B, C, s0, chunk=8)
+    S = s0
+    outs = []
+    for t in range(T):
+        o, S = ssd_decode(x[:, :, t], al[:, :, t], B[:, t], C[:, t], S)
+        outs.append(o)
+    y_n = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf_c), np.asarray(S),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_nonzero_state(key):
+    x, al, B, C, _ = _inputs(key, 1, 2, 32, 8, 16)
+    s0 = jax.random.normal(key, (1, 2, 8, 16))
+    y, sf = ssd(x, al, B, C, s0, chunk=16)
+    ye, sfe = ssd_chunked(x, al, B, C, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(Bt=st.integers(1, 2), H=st.integers(1, 3), nc=st.integers(1, 3),
+       N=st.sampled_from([4, 16]), P=st.sampled_from([8, 32]))
+def test_kernel_property(Bt, H, nc, N, P):
+    key = jax.random.PRNGKey(Bt * 31 + H * 7 + nc * 3 + N + P)
+    T = nc * 32
+    x, al, B, C, s0 = _inputs(key, Bt, H, T, N, P)
+    y, sf = ssd(x, al, B, C, s0, chunk=32)
+    ye, _ = ssd_chunked(x, al, B, C, s0, chunk=32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=3e-4, atol=3e-4)
+    assert np.isfinite(np.asarray(sf)).all()

@@ -1,0 +1,219 @@
+"""Substrate tests: optimizers, schedules, data partitioners, checkpointing,
+FL baselines, HLO cost parser, and the train-step factory."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, data as D, optim, train
+from repro.configs import get_config
+from repro.core import head as H
+from repro.fl import baselines as FB
+from repro.launch.hlo_cost import HloCost
+from repro.models import model as M
+
+
+class TestOptim:
+    @pytest.mark.parametrize("make", [
+        lambda: optim.sgd(0.1), lambda: optim.sgd(0.05, momentum=0.9),
+        lambda: optim.adam(0.05), lambda: optim.yogi(0.1)])
+    def test_minimizes_quadratic(self, make):
+        opt = make()
+        p = {"x": jnp.asarray([3.0, -2.0])}
+        s = opt.init(p)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(jnp.square(p["x"])))(p)
+            u, s = opt.update(g, s, p)
+            p = optim.apply_updates(p, u)
+        assert float(jnp.max(jnp.abs(p["x"]))) < 0.05
+
+    def test_adam_weight_decay(self):
+        opt = optim.adam(0.1, weight_decay=0.5)
+        p = {"x": jnp.asarray([1.0])}
+        s = opt.init(p)
+        u, s = opt.update({"x": jnp.asarray([0.0])}, s, p)
+        assert float(u["x"][0]) < 0.0  # decay pulls toward zero
+
+    def test_schedules(self):
+        cos = optim.cosine_schedule(1.0, 100, warmup_steps=10)
+        assert float(cos(0)) < 0.2
+        assert abs(float(cos(10)) - 1.0) < 0.1
+        assert float(cos(99)) < 0.05
+        lin = optim.linear_schedule(1.0, 100, warmup_steps=0)
+        assert float(lin(0)) == 1.0 and float(lin(100)) == 0.0
+
+    def test_bf16_params_f32_state(self, key):
+        p = {"w": jnp.ones((4,), jnp.bfloat16)}
+        opt = optim.adam(1e-2)
+        s = opt.init(p)
+        assert s["m"]["w"].dtype == jnp.float32
+        u, s = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, s, p)
+        p2 = optim.apply_updates(p, u)
+        assert p2["w"].dtype == jnp.bfloat16
+
+
+class TestData:
+    def test_dirichlet_partition_covers_everything(self):
+        _, y = D.make_dataset(D.DatasetConfig(n_classes=5, n_per_class=40))
+        parts = D.dirichlet_partition(y, 7, beta=0.1)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(y)
+        assert len(np.unique(allidx)) == len(y)
+
+    def test_dirichlet_beta_controls_skew(self):
+        _, y = D.make_dataset(D.DatasetConfig(n_classes=10,
+                                              n_per_class=100))
+        def skew(beta):
+            parts = D.dirichlet_partition(y, 10, beta=beta, seed=1)
+            # mean class-entropy across clients (low = skewed)
+            ents = []
+            for p in parts:
+                if len(p) == 0:
+                    continue
+                c = np.bincount(np.asarray(y)[p], minlength=10) / len(p)
+                ents.append(-np.sum(c * np.log(c + 1e-12)))
+            return np.mean(ents)
+        assert skew(0.05) < skew(100.0)
+
+    def test_disjoint_split(self):
+        _, y = D.make_dataset(D.DatasetConfig(n_classes=6, n_per_class=10))
+        src, dst = D.disjoint_label_split(y)
+        assert set(np.asarray(y)[src]) == {0, 1, 2}
+        assert set(np.asarray(y)[dst]) == {3, 4, 5}
+
+    def test_covariate_shift_shares_geometry(self):
+        cfg = D.DatasetConfig(n_classes=4, n_per_class=200, input_dim=16,
+                              n_domains=2, domain_shift=1.0)
+        (xa, ya), (xb, yb) = D.covariate_shift_pair(cfg)
+        # same labels, different marginals
+        assert set(np.asarray(ya)) == set(np.asarray(yb))
+        assert float(jnp.linalg.norm(xa.mean(0) - xb.mean(0))) > 0.5
+
+    def test_task_shift_offsets_labels(self):
+        a = D.DatasetConfig(n_classes=3, n_per_class=10)
+        b = D.DatasetConfig(n_classes=4, n_per_class=10)
+        (_, ya), (_, yb), C = D.task_shift_pair(a, b)
+        assert C == 7
+        assert int(yb.min()) == 3 and int(yb.max()) == 6
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested_bf16(self, key):
+        tree = {"a": {"b": jnp.ones((3, 2), jnp.bfloat16),
+                      "c": jnp.arange(4, dtype=jnp.int32)},
+                "d": [jnp.zeros((2,)), jnp.ones((1,), jnp.float32)],
+                "e": None}
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "x.npz")
+            checkpoint.save(path, tree)
+            back = checkpoint.restore_like(tree, checkpoint.load(path))
+        assert back["e"] is None
+        assert back["a"]["b"].dtype == jnp.bfloat16
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+class TestFLBaselines:
+    @pytest.fixture(scope="class")
+    def split(self):
+        x, y = D.make_dataset(D.DatasetConfig(n_classes=5, n_per_class=80,
+                                              input_dim=12, class_sep=1.5))
+        xt, yt = D.make_dataset(
+            D.DatasetConfig(n_classes=5, n_per_class=40, input_dim=12,
+                            class_sep=1.5), split=1)
+        parts = D.iid_shards(len(y), 4)
+        return [(x[p], y[p]) for p in parts], xt, yt
+
+    def test_fedavg_beats_init(self, key, split):
+        clients, xt, yt = split
+        head, info = FB.fedavg(key, clients, 5,
+                               FB.MultiRoundConfig(rounds=4, local_steps=25,
+                                                   lr=1e-2))
+        assert float(H.accuracy(head, xt, yt)) > 0.6
+        assert info["comm_bytes"] == 4 * 2 * 4 * FB.head_comm_bytes(12, 5)
+
+    @pytest.mark.parametrize("kw", [dict(prox=0.1), dict(server="yogi"),
+                                    dict(topk_frac=0.25)])
+    def test_variants_run(self, key, split, kw):
+        clients, xt, yt = split
+        head, _ = FB.fedavg(key, clients, 5,
+                            FB.MultiRoundConfig(rounds=3, local_steps=20,
+                                                lr=1e-2, **kw))
+        assert float(H.accuracy(head, xt, yt)) > 0.4
+
+    def test_one_shot_aggregators(self, key, split):
+        clients, xt, yt = split
+        heads = [FB.local_train(k, H.init_head(k, 12, 5), f, y, 5,
+                                n_steps=80)
+                 for k, (f, y) in zip(jax.random.split(key, 4), clients)]
+        acc_avg = float(H.accuracy(FB.avg_heads(heads), xt, yt))
+        pred = FB.ensemble_predict(heads, xt)
+        acc_ens = float(jnp.mean((pred == yt).astype(jnp.float32)))
+        be = FB.fedbe(key, heads)
+        acc_be = float(jnp.mean((FB.ensemble_predict(be, xt) == yt)
+                                .astype(jnp.float32)))
+        for a in (acc_avg, acc_ens, acc_be):
+            assert a > 0.5
+        kd = FB.kd_transfer(key, heads[0], heads[1], *clients[1], 5)
+        assert float(H.accuracy(kd, xt, yt)) > 0.4
+
+
+class TestHloCost:
+    def test_matmul_flops_exact(self):
+        A = jnp.zeros((64, 32))
+        B = jnp.zeros((32, 16))
+        c = jax.jit(lambda a, b: a @ b).lower(A, B).compile()
+        got = HloCost(c.as_text()).total().dot_flops
+        assert got == 2 * 64 * 32 * 16
+
+    def test_scan_multiplies_body(self):
+        A = jnp.zeros((32, 32))
+        def f(a):
+            def body(x, _):
+                return x @ A, None
+            x, _ = jax.lax.scan(body, a, None, length=7)
+            return x
+        c = jax.jit(f).lower(A).compile()
+        got = HloCost(c.as_text()).total().dot_flops
+        assert got == 7 * 2 * 32 ** 3
+
+    def test_nested_scan(self):
+        A = jnp.zeros((16, 16))
+        def f(a):
+            def outer(x, _):
+                def inner(y, _):
+                    return y @ A, None
+                y, _ = jax.lax.scan(inner, x, None, length=3)
+                return y, None
+            x, _ = jax.lax.scan(outer, a, None, length=5)
+            return x
+        c = jax.jit(f).lower(A).compile()
+        got = HloCost(c.as_text()).total().dot_flops
+        assert got == 15 * 2 * 16 ** 3
+
+
+class TestTrainStep:
+    def test_microbatch_equivalent_grads(self, key):
+        """Grad accumulation over microbatches ≈ full-batch step."""
+        cfg = get_config("granite-3-2b").reduced()
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32", remat=False)
+        params = M.init_params(cfg, key)
+        opt = optim.sgd(1e-2)
+        batch = {
+            "tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab_size)}
+        s0 = opt.init(params)
+        p_full, _, m_full = train.make_train_step(cfg, opt)(params, s0,
+                                                            batch)
+        p_mb, _, m_mb = train.make_train_step(cfg, opt, microbatch=2)(
+            params, opt.init(params), batch)
+        np.testing.assert_allclose(float(m_full["loss"]),
+                                   float(m_mb["loss"]), rtol=1e-4)
+        for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_mb)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-5)

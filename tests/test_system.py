@@ -1,0 +1,199 @@
+"""System-level tests: the full FedPFT-over-foundation-model pipeline
+(backbone features → client EM → transfer → server head), the sharding rule
+tables, and a subprocess dry-run on the production mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data as D
+from repro.configs import ARCHS, FOUNDATION_STANDIN, get_config
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as HD
+from repro.launch import input_specs as I
+from repro.launch import sharding as S
+from repro.models import model as M
+from repro.models.config import INPUT_SHAPES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class FakeMesh2D:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class FakeMesh3D:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _spec_leaves(specs):
+    return jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
+
+
+class TestFullPipeline:
+    def test_backbone_features_to_fedpft(self, key):
+        """The paper's actual pipeline: a (tiny) transformer backbone is the
+        foundation model f; clients run w = h∘f with parametric transfer."""
+        cfg = FOUNDATION_STANDIN
+        params = M.init_params(cfg, key)
+        dcfg = D.DatasetConfig(n_classes=4, n_per_class=60, input_dim=64,
+                               class_sep=3.0)
+        x, y = D.make_dataset(dcfg)
+        xt, yt = D.make_dataset(dcfg, split=1)
+
+        def f(z):  # 8 frames of 8 dims, zero-padded to frame_embed_dim
+            B = z.shape[0]
+            frames = z.reshape(B, 8, 8)
+            frames = jnp.pad(frames, ((0, 0), (0, 0),
+                                      (0, cfg.frame_embed_dim - 8)))
+            return M.features(cfg, params, {"frames": frames})
+
+        feats, feats_t = f(x), f(xt)
+        fp = FP.FedPFTConfig(
+            gmm=G.GMMConfig(n_components=2, cov_type="diag", n_iter=10),
+            head=HD.HeadConfig(n_steps=250, lr=3e-3))
+        parts = D.iid_shards(len(y), 3)
+        clients = [(feats[p], y[p]) for p in parts]
+        head, info = FP.run_fedpft(key, clients, 4, fp)
+        acc = float(HD.accuracy(head, feats_t, yt))
+        head_c, _ = FP.centralized_baseline(key, clients, 4, fp)
+        acc_c = float(HD.accuracy(head_c, feats_t, yt))
+        assert acc > acc_c - 0.08, (acc, acc_c)
+
+
+class TestShardingRules:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_specs_divide_production_mesh(self, arch):
+        """Every sharded dim must divide its mesh axis (GSPMD hard
+        requirement) — for all archs on the 16×16 production layout."""
+        cfg = get_config(arch)
+        shapes = I.params_shapes(cfg)
+        specs = S.param_specs(cfg, shapes, FakeMesh2D())
+        flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for (kp, leaf), spec in zip(flat_shapes, _spec_leaves(specs)):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+                if ax is not None:
+                    assert dim % FakeMesh2D.shape[ax] == 0, \
+                        (arch, kp, leaf.shape, spec)
+
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_big_weights_are_sharded(self, arch):
+        """No per-layer parameter ≥ 8M elements may be fully replicated
+        (16 GB HBM budget discipline)."""
+        cfg = get_config(arch)
+        shapes = I.params_shapes(cfg)
+        specs = S.param_specs(cfg, shapes, FakeMesh2D())
+        flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for (kp, leaf), spec in zip(flat_shapes, _spec_leaves(specs)):
+            per_layer = int(np.prod(leaf.shape[1:])) \
+                if len(leaf.shape) > 2 else int(np.prod(leaf.shape))
+            if per_layer >= 8_000_000:
+                assert any(ax is not None for ax in tuple(spec)), \
+                    (arch, kp, leaf.shape)
+
+    def test_batch_specs(self):
+        sds = jax.ShapeDtypeStruct
+        b = {"tokens": sds((256, 4096), jnp.int32),
+             "odd": sds((3, 7), jnp.int32)}
+        specs = S.batch_specs(b, FakeMesh3D())
+        assert tuple(specs["tokens"])[0] == ("pod", "data")
+        assert tuple(specs["odd"])[0] is None  # indivisible → replicate
+
+    @pytest.mark.parametrize("arch,shape", [
+        ("yi-34b", "decode_32k"), ("zamba2-7b", "long_500k"),
+        ("rwkv6-3b", "decode_32k")])
+    def test_cache_specs_divide(self, arch, shape):
+        cfg = get_config(arch)
+        shapes = I.cache_shapes(cfg, INPUT_SHAPES[shape])
+        specs = S.cache_specs(shapes, FakeMesh2D())
+        for leaf, spec in zip(jax.tree.leaves(shapes), _spec_leaves(specs)):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+                if ax is not None:
+                    assert dim % FakeMesh2D.shape[ax] == 0, \
+                        (leaf.shape, spec)
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    @pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+    def test_specs_exist_for_supported_pairs(self, arch, shape):
+        cfg = get_config(arch)
+        sh = INPUT_SHAPES[shape]
+        ok, reason = I.pair_supported(cfg, sh)
+        if not ok:
+            assert cfg.family == "encoder" and sh.kind == "decode"
+            return
+        batch = I.batch_specs_for(cfg, sh, sh.kind)
+        for leaf in jax.tree.leaves(batch):
+            assert leaf.shape[0] == sh.global_batch
+        if sh.kind == "decode":
+            cache = I.cache_shapes(cfg, sh)
+            assert jax.tree.leaves(cache)
+
+    def test_window_rules(self):
+        assert I.window_for(get_config("yi-34b"),
+                            INPUT_SHAPES["long_500k"]) == 8192
+        assert I.window_for(get_config("yi-34b"),
+                            INPUT_SHAPES["decode_32k"]) == 0
+        assert I.window_for(get_config("rwkv6-3b"),
+                            INPUT_SHAPES["long_500k"]) == 0
+
+
+@pytest.mark.slow
+class TestDryRunSubprocess:
+    """One real production-mesh compile via subprocess (the 512-device
+    XLA flag must be set before jax init, hence not in-process)."""
+
+    def _run(self, *args):
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", *args],
+            capture_output=True, text=True, env=env, timeout=580)
+
+    def test_single_pod_decode(self, tmp_path):
+        out = tmp_path / "r.json"
+        r = self._run("--arch", "granite-3-2b", "--shape", "decode_32k",
+                      "--json-out", str(out))
+        assert r.returncode == 0, r.stderr[-2000:]
+        row = json.loads(out.read_text())[0]
+        assert row["status"] == "ok"
+        assert row["t_compute_s"] >= 0 and row["flops"] > 0
+
+    def test_multi_pod_decode(self, tmp_path):
+        out = tmp_path / "r.json"
+        r = self._run("--arch", "granite-3-2b", "--shape", "decode_32k",
+                      "--multi-pod", "--json-out", str(out))
+        assert r.returncode == 0, r.stderr[-2000:]
+        row = json.loads(out.read_text())[0]
+        assert row["status"] == "ok" and row["n_chips"] == 512
+
+    def test_encoder_decode_skips(self, tmp_path):
+        out = tmp_path / "r.json"
+        r = self._run("--arch", "hubert-xlarge", "--shape", "decode_32k",
+                      "--json-out", str(out))
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert json.loads(out.read_text())[0]["status"] == "skip"
+
+    def test_fedpft_wire_bytes_match_eqs_9_11(self):
+        """The shard_map one-shot transfer moves exactly Eqs. 9-11 bytes
+        over the mesh (× a constant 2 lowering factor), and far fewer than
+        raw features."""
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.fedpft_dryrun"],
+            capture_output=True, text=True, env=env, timeout=580)
+        assert r.returncode == 0, r.stderr[-2000:]
+        lines = [ln for ln in r.stdout.splitlines() if "ratio=" in ln]
+        ratios = [float(ln.rsplit("ratio=", 1)[1]) for ln in lines]
+        assert len(ratios) == 2
+        # same constant lowering factor on both channels
+        assert abs(ratios[0] - ratios[1]) < 0.2 * ratios[0]
+        assert "fewer bytes" in r.stdout
