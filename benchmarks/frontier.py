@@ -6,6 +6,8 @@ several round budgets) over a Dirichlet(β=0.1) split of the benchmark task
 across 20 clients — each point is (comm bytes, test accuracy)."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -39,24 +41,26 @@ def main(quick: bool = False):
     C.emit("frontier/centralized", us,
            f"acc={C.accuracy(head_c, ft, yt):.4f};comm={info_c['comm_bytes']}")
 
-    # ---- one-shot head-level baselines ----
+    # ---- one-shot head-level baselines: same FedSession, HeadSummarizer —
+    # comm is the actual encoded payload length of each head message ----
+    from repro.fl import api as FA
+    base_sess = FA.FedSession(n_classes=Cn,
+                              summarizer=FA.HeadSummarizer(n_steps=150,
+                                                           lr=3e-3))
+    # encode each client head ONCE; the three aggregators reuse the messages
     ks = jax.random.split(key, len(clients) + 1)
-    heads = [FB.local_train(k, H.init_head(k, d, Cn), cf, cy, Cn,
-                            n_steps=150, lr=3e-3)
-             for k, (cf, cy) in zip(ks[1:], clients)]
-    head_bytes = len(clients) * FB.head_comm_bytes(d, Cn)
-
-    pred = FB.ensemble_predict(heads, ft)
-    acc = float(jnp.mean((pred == yt).astype(jnp.float32)))
-    C.emit("frontier/ensemble", 0, f"acc={acc:.4f};comm={head_bytes}")
-
-    acc = C.accuracy(FB.avg_heads(heads), ft, yt)
-    C.emit("frontier/avg", 0, f"acc={acc:.4f};comm={head_bytes}")
-
-    be = FB.fedbe(key, heads, n_samples=10)
-    acc = float(jnp.mean((FB.ensemble_predict(be, ft) == yt)
-                         .astype(jnp.float32)))
-    C.emit("frontier/fedbe", 0, f"acc={acc:.4f};comm={head_bytes}")
+    head_msgs = [base_sess.client_update(k, cf, cy)
+                 for k, (cf, cy) in zip(ks[1:], clients)]
+    for agg in ("ensemble", "avg", "fedbe"):
+        res = dataclasses.replace(base_sess, aggregate=agg) \
+            .server_aggregate(ks[0], head_msgs)
+        if agg == "avg":
+            acc = C.accuracy(res.model, ft, yt)
+        else:
+            pred = FB.ensemble_predict(res.model, ft)
+            acc = float(jnp.mean((pred == yt).astype(jnp.float32)))
+        C.emit(f"frontier/{agg}", 0,
+               f"acc={acc:.4f};comm={res.info['comm_bytes']}")
 
     # ---- FedPFT sweep ----
     sweeps = [("diag", 1), ("diag", 5), ("diag", 10), ("spher", 1),
@@ -82,15 +86,9 @@ def main(quick: bool = False):
     cfg = FP.FedPFTConfig(
         gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
         head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
-    msgs = []
-    for k, (cf, cy) in zip(jax.random.split(key, len(clientsD)), clientsD):
-        m = FP.client_update(k, cf, cy, Cn, cfg)
-        m.counts[m.counts < 50] = 0
-        priv = DP.privatize_classwise(
-            k, m.gmms, m.counts, DP.DPConfig(epsilon=1.0, delta=1e-2))
-        m.gmms = jax.device_get(priv)
-        msgs.append(m)
-    head, info = FP.server_aggregate(key, msgs, Cn, cfg)
+    head, info = DP.run_dp_fedpft(key, clientsD, Cn, cfg,
+                                  DP.DPConfig(epsilon=1.0, delta=1e-2),
+                                  min_class_count=50)
     ftn = ftD / jnp.maximum(jnp.linalg.norm(ftD, axis=-1, keepdims=True),
                             1.0)
     C.emit("frontier/dp_fedpft_eps1", 0,

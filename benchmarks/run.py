@@ -13,6 +13,7 @@ Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   comm_cost         Eqs. 9-11         cost model + measured wire bytes
   ablations         beyond-paper      EM iters, seeding, wire precision,
                                       heterogeneous per-client K (§6.3)
+  synthesize_bench  ISSUE 1           looped vs batched server synthesis
   roofline_report   deliverable (g)   dry-run roofline table
 """
 from __future__ import annotations
@@ -25,8 +26,8 @@ import traceback
 from benchmarks import common as C
 
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
-           "reconstruction", "shifts", "ablations", "frontier",
-           "roofline_report"]
+           "reconstruction", "shifts", "ablations", "synthesize_bench",
+           "frontier", "roofline_report"]
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,71 @@
+"""Micro-benchmark: looped vs batched server-side synthesis (ISSUE 1).
+
+The v1 server sampled with an O(clients × classes) Python loop — one device
+dispatch per (client, class) mixture. The redesigned path
+(``fl.api.synthesize_batched``) is ONE jitted sample over the stacked
+(M, C, K, …) GMM tensor plus a single host-side gather. This bench sweeps
+the clients × classes grid and reports both, with the batched path expected
+to win from ~10 × 10 up.
+
+Rows: ``synthesize_bench/M{M}_C{C}_{impl}`` with us_per_call and
+``speedup=`` on the batched row.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.fl import api as FA
+
+K = 5
+D = 64
+SAMPLES_PER_SLOT = 50
+
+
+def _make_batch(key, M, Cn):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "pi": jax.nn.softmax(jax.random.normal(ks[0], (M, Cn, K))),
+        "mu": jax.random.normal(ks[1], (M, Cn, K, D)),
+        "cov": 0.1 + jax.random.uniform(ks[2], (M, Cn, K, D)),
+    }
+    counts = np.full((M, Cn), SAMPLES_PER_SLOT, np.int64)
+    return jax.tree.map(jax.block_until_ready, batch), counts
+
+
+def _time(fn, *args, reps: int) -> float:
+    out = fn(*args)                         # warmup (compile for batched)
+    jax.block_until_ready(out[0])
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out[0])
+    return (time.time() - t0) / reps * 1e6
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(11)
+    grid = [(2, 4), (10, 10), (20, 16)]
+    if quick:
+        grid = [(2, 4), (10, 10)]
+    reps = 2 if quick else 3
+    for M, Cn in grid:
+        batch, counts = _make_batch(jax.random.fold_in(key, M * Cn), M, Cn)
+        us_loop = _time(
+            lambda: FA.synthesize_looped(key, batch, counts, "diag"),
+            reps=reps)
+        us_batch = _time(
+            lambda: FA.synthesize_batched(key, batch, counts, "diag"),
+            reps=reps)
+        C.emit(f"synthesize_bench/M{M}_C{Cn}_looped", us_loop,
+               f"dispatches={M * Cn}")
+        C.emit(f"synthesize_bench/M{M}_C{Cn}_batched", us_batch,
+               f"speedup={us_loop / max(us_batch, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,17 @@ def main():
     print("→ knowledge accumulates along the chain; the last client covers "
           "all classes after ONE pass.")
 
+    # ---- same session, Ring topology: a second lap closes the loop so the
+    # EARLY clients also refit on the accumulated global knowledge ----
+    from repro.fl import api as FA
+    sess = FP.session_for(n_classes, cfg, topology=FA.Ring(laps=2))
+    res = sess.run(key, clients)
+    acc0 = float(H.accuracy(res.info["per_client"][len(clients)]["head"],
+                            xt, yt))
+    print(f"ring (2 laps): client 1's second-lap head acc = {acc0:.4f} "
+          f"(vs {float(H.accuracy(infos[0]['head'], xt, yt)):.4f} after "
+          f"one chain pass); total comm = {res.info['comm_bytes']/1e3:.1f} KB")
+
 
 if __name__ == "__main__":
     main()

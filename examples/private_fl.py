@@ -31,13 +31,17 @@ def main():
 
     print("ε        acc     (δ=1e-2, K=1 full-cov, unit-norm features)")
     for eps in (0.5, 1.0, 2.0, float("inf")):
-        msg = FP.client_update(key, x, y, n_classes, cfg)
         if jnp.isfinite(eps):
-            priv = DP.privatize_classwise(
-                key, msg.gmms, msg.counts,
+            # DP-FedPFT through the unified FedSession: privatize → encode
+            # → decode → batched synthesis, one session call
+            head, _ = DP.run_dp_fedpft(
+                key, [(x, y)], n_classes, cfg,
                 DP.DPConfig(epsilon=float(eps), delta=1e-2))
-            msg.gmms = jax.device_get(priv)
-        head, _ = FP.server_aggregate(key, [msg], n_classes, cfg)
+        else:
+            # ε=∞ reference through the SAME session (codec included), so
+            # the sweep isolates the DP noise, not wire precision
+            sess = FP.session_for(n_classes, cfg, normalize_features=True)
+            head = sess.run(key, [(x, y)]).model
         acc = float(H.accuracy(head, xn(xt), yt))
         print(f"{eps:<8} {acc:.4f}")
 

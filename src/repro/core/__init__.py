@@ -3,9 +3,10 @@
 Modules:
   gmm            jit/vmap EM over full/diag/spher Gaussian mixtures
   head           linear classifier-head training (the global model's h)
-  fedpft         centralized one-shot FedPFT (Algorithm 1)
-  decentralized  chain-topology FedPFT (§4.2)
-  dp             DP-FedPFT Gaussian mechanism (Theorem 4.1)
+  fedpft         centralized one-shot FedPFT (Algorithm 1) — v1 shims over
+                 the unified FedSession API in repro.fl.api (DESIGN.md §2)
+  decentralized  chain-topology FedPFT (§4.2) via FedSession(Chain())
+  dp             DP-FedPFT Gaussian mechanism (Theorem 4.1) + session entry
   theory         Theorem 6.1 bound + Eqs. 9-11 comm-cost model
   reconstruction feature-inversion attack (§6.4)
 """

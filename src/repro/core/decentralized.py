@@ -5,74 +5,54 @@ i-1, samples synthetic features from them, unions with its local features,
 re-fits per-class GMMs on the union, and passes those on. One pass over the
 chain accumulates every client's knowledge into the last message — still one
 communication per client.
+
+Implemented as ``FedSession(topology=Chain())`` from :mod:`repro.fl.api`, so
+the chain shares the wire codec, message schema, and batched synthesis path
+with the centralized and DP variants. ``Ring`` (a chain with wraparound
+laps) is available through the same session API::
+
+    sess = FP.session_for(n_classes, cfg, topology=FA.Ring(laps=2))
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import gmm as G
-from repro.core import head as H
-from repro.core.fedpft import ClientMessage, FedPFTConfig, maybe_normalize
+from repro.core.fedpft import ClientMessage, FedPFTConfig, session_for
 
 
-def _sample_from_message(key, msg: ClientMessage, cov_type: str
-                         ) -> Tuple[jax.Array, jax.Array]:
-    feats, labels = [], []
-    C = len(msg.counts)
-    keys = jax.random.split(key, C)
-    for c in range(C):
-        n = int(msg.counts[c])
-        if n <= 0:
-            continue
-        g = jax.tree.map(lambda a, c=c: jnp.asarray(a)[c], msg.gmms)
-        feats.append(G.sample(keys[c], g, n, cov_type))
-        labels.append(jnp.full((n,), c, jnp.int32))
-    if not feats:
-        return None, None
-    return jnp.concatenate(feats), jnp.concatenate(labels)
+def _as_v2(msg, n_classes: int, cov_type: str, codec):
+    """Upgrade a v1 ``ClientMessage`` (raw ``gmms`` dict) to the v2 wire
+    message, putting its parameters through the codec round-trip."""
+    from repro.fl import api as FA
+    if isinstance(msg, FA.ClientMessage):
+        return msg
+    return FA.encode_message(msg.gmms, msg.counts, msg.logliks, kind="gmm",
+                             cov_type=cov_type, n_classes=n_classes,
+                             codec=codec)
 
 
 def chain_step(key, feats: jax.Array, labels: jax.Array, n_classes: int,
                received: Optional[ClientMessage], cfg: FedPFTConfig
-               ) -> Tuple[ClientMessage, Dict]:
+               ) -> Tuple["ClientMessage", Dict]:
     """One client's turn: union local features with synthetic ones sampled
     from the received message, re-fit, emit. Also trains the local head on
     the union (paper: 'each client can use the combined features')."""
-    k_sample, k_fit, k_head = jax.random.split(key, 3)
-    feats = maybe_normalize(feats, cfg)
+    sess = session_for(n_classes, cfg)
     if received is not None:
-        syn_f, syn_y = _sample_from_message(k_sample, received,
-                                            cfg.gmm.cov_type)
-        if syn_f is not None:
-            feats = jnp.concatenate([feats, syn_f], axis=0)
-            labels = jnp.concatenate([labels, syn_y], axis=0)
-    gmms, counts, lls = G.fit_classwise_gmms(k_fit, feats, labels, n_classes,
-                                             cfg.gmm)
-    msg = ClientMessage(gmms=jax.device_get(gmms),
-                        counts=np.asarray(counts, np.int64),
-                        logliks=np.asarray(lls))
-    head_params, _ = H.train_head(k_head, feats, labels, n_classes, cfg.head)
-    return msg, {"head": head_params, "n_train": int(feats.shape[0])}
+        received = _as_v2(received, n_classes, cfg.gmm.cov_type, sess.codec)
+    return sess.chain_step(key, feats, labels, 0, received)
 
 
 def run_chain(key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]],
               n_classes: int, cfg: FedPFTConfig
-              ) -> Tuple[List[ClientMessage], List[Dict]]:
+              ) -> Tuple[List["ClientMessage"], List[Dict]]:
     """Linear topology (Figure 5): client 1 → 2 → … → I.
 
     Returns per-client (message sent, local info incl. trained head).
     """
-    msgs, infos = [], []
-    received = None
-    keys = jax.random.split(key, len(client_datasets))
-    for k, (f, y) in zip(keys, client_datasets):
-        msg, info = chain_step(k, f, y, n_classes, received, cfg)
-        msgs.append(msg)
-        infos.append(info)
-        received = msg
-    return msgs, infos
+    from repro.fl import api as FA
+    sess = session_for(n_classes, cfg, topology=FA.Chain())
+    res = sess.run(key, client_datasets)
+    return res.messages, res.info["per_client"]

@@ -58,6 +58,31 @@ def privatize_gaussian(key, mu: jax.Array, cov: jax.Array, n: int,
     return mu_t, cov_t
 
 
+def run_dp_fedpft(key, client_datasets, n_classes: int, fp_cfg,
+                  dp_cfg: "DPConfig", min_class_count: int = 0):
+    """One-shot DP-FedPFT through the unified ``FedSession`` (star topology).
+
+    Clients fit K=1 full-covariance per-class Gaussians over unit-norm
+    features, privatize them with the Theorem 4.1 mechanism, and the encoded
+    messages flow through the same codec + batched synthesis as non-private
+    FedPFT.  ``min_class_count`` drops classes with too few samples to
+    survive the σ ∝ 1/n noise (they are simply not transmitted).
+
+    Returns (head_params, info) with ``info["comm_bytes"]`` equal to the
+    total encoded payload length.
+    """
+    from repro.core.fedpft import session_for
+    assert fp_cfg.gmm.n_components == 1 and fp_cfg.gmm.cov_type == "full", \
+        "Theorem 4.1 requires K=1 full-covariance summaries"
+    sess = session_for(n_classes, fp_cfg, dp=dp_cfg,
+                       normalize_features=True,
+                       min_class_count=min_class_count)
+    res = sess.run(key, client_datasets)
+    info = dict(res.info)
+    info["messages"] = res.messages
+    return res.model, info
+
+
 def privatize_classwise(key, gmms: Dict, counts, cfg: DPConfig) -> Dict:
     """Apply the mechanism to stacked per-class K=1 full-cov GMMs.
 

@@ -1,15 +1,27 @@
 """FedPFT — centralized one-shot FL via parametric feature transfer.
 
-Implements the paper's Algorithm 1 end-to-end:
+The paper's Algorithm 1, now expressed on top of the unified federation API
+in :mod:`repro.fl.api` (DESIGN.md §2):
 
   client side   fit one GMM per present class over foundation features
-  wire          pack GMM params to the 16-bit wire format; count bytes
-  server side   sample |F^{i,c}| synthetic features per received GMM,
-                pool, train the global classifier head
+                (``GMMSummarizer`` — one jitted vmap over classes)
+  wire          a REAL 16-bit encode → bytes → decode round-trip
+                (``QuantizedCodec``); ``comm_bytes == len(payload)`` and the
+                server computes on the *decoded* parameters
+  server side   ONE batched jitted sample over the stacked (M, C, K, …)
+                GMM tensor, pool, train the global classifier head
 
-The client fit is one jitted vmap over classes; the server head fit is one
-jitted scan. Orchestration across clients is host-level python (that *is*
-the FL topology — each iteration is a distinct physical machine).
+Prefer the new entry point::
+
+    from repro.fl import api as FA
+    sess = FA.FedSession(n_classes=C, summarizer=FA.GMMSummarizer(gmm_cfg))
+    result = sess.run(key, clients)
+
+``run_fedpft`` below is kept as a thin deprecated shim over
+``FedSession(topology=Star())`` with the same ``(head, info)`` contract;
+``client_update`` / ``server_aggregate`` / ``synthesize`` remain for callers
+holding v1 ``ClientMessage`` objects and now route through the same batched
+synthesis kernel path.
 """
 from __future__ import annotations
 
@@ -89,28 +101,24 @@ def client_update(key, feats: jax.Array, labels: jax.Array, n_classes: int,
 # ---------------------------------------------------------------------------
 
 
+def _message_gmms(msg) -> Dict:
+    """Param pytree of a v1 (``gmms``) or v2 (``params``) message."""
+    return msg.gmms if hasattr(msg, "gmms") else msg.params
+
+
 def synthesize(key, messages: Sequence[ClientMessage], cov_type: str,
                samples_per_class: Optional[int] = None
                ) -> Tuple[jax.Array, jax.Array]:
-    """Algorithm 1, lines 13-16: draw |F^{i,c}| samples from every g^{i,c}."""
-    all_feats, all_labels = [], []
-    for msg in messages:
-        C = len(msg.counts)
-        keys = jax.random.split(key, C + 1)
-        key = keys[0]
-        for c in range(C):
-            n = int(msg.counts[c])
-            if samples_per_class is not None and n > 0:
-                n = samples_per_class
-            if n <= 0:
-                continue
-            g = jax.tree.map(lambda a, c=c: jnp.asarray(a)[c], msg.gmms)
-            s = G.sample(keys[c + 1], g, n, cov_type)
-            all_feats.append(s)
-            all_labels.append(jnp.full((n,), c, jnp.int32))
-    feats = jnp.concatenate(all_feats, axis=0)
-    labels = jnp.concatenate(all_labels, axis=0)
-    return feats, labels
+    """Algorithm 1, lines 13-16: draw |F^{i,c}| samples from every g^{i,c}.
+
+    Messages with matching (K, d) stack into ONE batched jitted sample call
+    (``fl.api.synthesize_groups``); sampling keys are folded per
+    (client, class) slot, so no two mixtures share a key.
+    """
+    from repro.fl import api as FA
+    return FA.synthesize_groups(
+        key, [(_message_gmms(m), m.counts, cov_type) for m in messages],
+        samples_per_class)
 
 
 def server_aggregate(key, messages: Sequence[ClientMessage], n_classes: int,
@@ -136,46 +144,60 @@ def server_aggregate(key, messages: Sequence[ClientMessage], n_classes: int,
 # ---------------------------------------------------------------------------
 
 
+def session_for(n_classes: int, cfg: FedPFTConfig,
+                client_cfgs: Optional[Sequence[FedPFTConfig]] = None,
+                **overrides):
+    """Build the :class:`repro.fl.api.FedSession` equivalent of a v1 config."""
+    from repro.fl import api as FA
+    wire_by_width = {2: "bfloat16", 4: "float32"}
+    assert cfg.bytes_per_scalar in wire_by_width, \
+        f"no wire dtype for bytes_per_scalar={cfg.bytes_per_scalar}"
+    wire = wire_by_width[cfg.bytes_per_scalar]
+    kw = dict(
+        n_classes=n_classes,
+        summarizer=FA.GMMSummarizer(cfg.gmm),
+        codec=FA.QuantizedCodec(wire),
+        head=cfg.head,
+        normalize_features=cfg.normalize_features,
+    )
+    if client_cfgs is not None:
+        # the heterogeneity axis is the summary (K, cov family — §6.3);
+        # wire precision and normalization are session-wide, so refuse
+        # divergent per-client settings instead of mis-accounting them
+        for c in client_cfgs:
+            assert (c.bytes_per_scalar == cfg.bytes_per_scalar
+                    and c.normalize_features == cfg.normalize_features), \
+                "per-client bytes_per_scalar/normalize_features are not " \
+                "supported; vary gmm (n_components, cov_type) only"
+        kw["client_summarizers"] = tuple(FA.GMMSummarizer(c.gmm)
+                                         for c in client_cfgs)
+    kw.update(overrides)
+    return FA.FedSession(**kw)
+
+
 def run_fedpft(key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]],
                n_classes: int, cfg: FedPFTConfig,
                client_cfgs: Optional[Sequence[FedPFTConfig]] = None
                ) -> Tuple[Dict, Dict]:
     """One-shot FedPFT over ``[(feats_i, labels_i)]``. Returns (head, info).
 
+    .. deprecated:: thin shim over ``FedSession(topology=Star())`` — prefer
+       building the session directly (see module docstring). Kept so every
+       caller of the v1 entry point transparently gets the unified message
+       schema, the real wire codec, and the batched synthesis path.
+
     ``client_cfgs`` (paper §6.3: "each client can utilize a different K")
     lets clients with heterogeneous communication budgets pick their own
     mixture count / covariance family — the server consumes any mix, since
     it only ever samples from the received parametric models.
     """
-    keys = jax.random.split(key, len(client_datasets) + 1)
-    cfgs = client_cfgs or [cfg] * len(client_datasets)
-    assert len(cfgs) == len(client_datasets)
-    messages = [
-        client_update(k, f, y, n_classes, ci)
-        for k, (f, y), ci in zip(keys[1:], client_datasets, cfgs)
-    ]
-    if client_cfgs is None:
-        head_params, info = server_aggregate(keys[0], messages, n_classes,
-                                             cfg)
-    else:
-        # heterogeneous cov types: synthesize per client, pool, train
-        k_syn, k_head = jax.random.split(keys[0])
-        fs, ys = [], []
-        for m, ci, kk in zip(messages, cfgs,
-                             jax.random.split(k_syn, len(messages))):
-            f, y = synthesize(kk, [m], ci.gmm.cov_type)
-            fs.append(f)
-            ys.append(y)
-        feats = jnp.concatenate(fs)
-        labels = jnp.concatenate(ys)
-        head_params, losses = H.train_head(k_head, feats, labels, n_classes,
-                                           cfg.head)
-        comm = sum(m.wire_bytes(ci.gmm.cov_type, ci.bytes_per_scalar)
-                   for m, ci in zip(messages, cfgs))
-        info = {"synthetic_feats": feats, "synthetic_labels": labels,
-                "head_losses": losses, "comm_bytes": comm}
-    info["messages"] = messages
-    return head_params, info
+    if client_cfgs is not None:
+        assert len(client_cfgs) == len(client_datasets)
+    sess = session_for(n_classes, cfg, client_cfgs)
+    res = sess.run(key, client_datasets)
+    info = dict(res.info)
+    info["messages"] = res.messages
+    return res.model, info
 
 
 def centralized_baseline(key, client_datasets, n_classes,

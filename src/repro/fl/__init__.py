@@ -1,17 +1,28 @@
-"""FL baselines the paper compares against (Figures 1/4, Tables 2/5).
+"""Federation layer: the unified session API plus the paper's baselines.
 
-All baselines operate at the classifier-head level over frozen foundation
-features — exactly the paper's setup. Multi-round: FedAvg, FedProx, FedYogi,
-DSFL (top-k sparsified FedAvg). One-shot: parameter averaging (AVG),
-prediction Ensemble, FedBE (Bayesian model ensemble), and KD (source→dest
-head distillation).
+``api`` (DESIGN.md §2) is the single federation surface — ``FedSession``
+composes a Summarizer (per-class GMMs, or locally-trained heads for the
+one-shot baselines), a real ``QuantizedCodec`` wire format, a Topology
+(star / chain / ring), and an optional DP hook.
 
-Communication accounting matches §6.3: each head transfer costs
-(C·d + C)·bytes_per_scalar; multi-round methods pay it up+down per round.
+``baselines`` holds the methods the paper compares against (Figures 1/4,
+Tables 2/5), all at the classifier-head level over frozen foundation
+features. Multi-round: FedAvg, FedProx, FedYogi, DSFL (top-k sparsified).
+One-shot: AVG, Ensemble, FedBE, KD — routed through ``FedSession`` via
+``HeadSummarizer``, so their reported communication is the actual encoded
+payload length ((C·d + C)·bytes_per_scalar, §6.3); multi-round methods pay
+it up+down per round.
 """
+from repro.fl import api
+from repro.fl.api import (Chain, ClientMessage, FedSession, GMMSummarizer,
+                          HeadSummarizer, QuantizedCodec, Ring, Star,
+                          synthesize_batched)
 from repro.fl.baselines import (MultiRoundConfig, avg_heads,
                                 ensemble_predict, fedavg, fedbe,
                                 head_comm_bytes, kd_transfer, local_train)
 
 __all__ = ["MultiRoundConfig", "fedavg", "local_train", "avg_heads",
-           "ensemble_predict", "fedbe", "kd_transfer", "head_comm_bytes"]
+           "ensemble_predict", "fedbe", "kd_transfer", "head_comm_bytes",
+           "api", "FedSession", "GMMSummarizer", "HeadSummarizer",
+           "QuantizedCodec", "Star", "Chain", "Ring", "ClientMessage",
+           "synthesize_batched"]

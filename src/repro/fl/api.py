@@ -1,0 +1,643 @@
+"""Unified federation API — one message schema, one codec, one synthesis path.
+
+Layering (DESIGN.md §2): every FedPFT variant in this repo is the same four
+orthogonal pieces composed by a :class:`FedSession`:
+
+    Summarizer   what a client distills its data into (per-class GMMs today;
+                 locally-trained heads for the one-shot baselines; the slot
+                 is open for other parametric summaries)
+    WireCodec    how a summary becomes bytes — a REAL quantize → serialize →
+                 dequantize round-trip, so ``comm_bytes == len(payload)`` and
+                 downstream accuracy is measured on the *decoded* parameters
+    Topology     who talks to whom: ``Star`` (clients → server), ``Chain``
+                 (client i → i+1, §4.2), ``Ring`` (chain with wraparound laps)
+    privacy      an optional DP hook applied to the summary *before* encoding
+                 (Theorem 4.1's Gaussian mechanism)
+
+Server-side synthesis is one jitted sample over the stacked ``(M, C, K, …)``
+GMM tensor — no per-client or per-class Python dispatch — with sampling keys
+folded deterministically per (client, class) slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.core import dp as DP
+from repro.core import gmm as G
+from repro.core import head as H
+
+__all__ = [
+    "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
+    "HeadSummarizer", "Star", "Chain", "Ring", "FedSession", "SessionResult",
+    "encode_message", "stack_messages", "synthesize_batched",
+    "synthesize_looped",
+]
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+
+_WIRE_DTYPES = {
+    "float16": np.float16,
+    "bfloat16": ml_dtypes.bfloat16,
+    "float32": np.float32,
+}
+
+# serialization order of the GMM wire pytree (explicit, not tree-sort)
+_GMM_FIELDS = ("pi", "mu", "cov")
+_HEAD_FIELDS = ("w", "b")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedCodec:
+    """fp16 / bf16 / fp32 wire codec over flat parameter pytrees.
+
+    ``encode`` quantizes each leaf to ``dtype`` and concatenates raw bytes
+    in a fixed field order; ``decode`` reverses it and *dequantizes back to
+    f32* — so whatever the server computes on has actually been through the
+    wire precision.  ``len(encode(t))`` is exactly
+    ``n_scalars(t) * bytes_per_scalar`` — Eqs. 9-11 with no hidden framing
+    (schema metadata travels in the out-of-band :class:`WireHeader`).
+    """
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert self.dtype in _WIRE_DTYPES, self.dtype
+
+    @property
+    def bytes_per_scalar(self) -> int:
+        return np.dtype(_WIRE_DTYPES[self.dtype]).itemsize
+
+    def encode(self, arrays: Dict[str, Any], fields: Sequence[str]) -> bytes:
+        wd = _WIRE_DTYPES[self.dtype]
+        return b"".join(
+            np.ascontiguousarray(
+                np.asarray(jax.device_get(arrays[f])).astype(wd)).tobytes()
+            for f in fields)
+
+    def decode(self, payload: bytes, shapes: Dict[str, Tuple[int, ...]],
+               fields: Sequence[str]) -> Dict[str, np.ndarray]:
+        wd = _WIRE_DTYPES[self.dtype]
+        itemsize = np.dtype(wd).itemsize
+        out, off = {}, 0
+        for f in fields:
+            n = int(np.prod(shapes[f], dtype=np.int64)) if shapes[f] else 1
+            raw = np.frombuffer(payload, dtype=wd, count=n, offset=off)
+            out[f] = raw.astype(np.float32).reshape(shapes[f])
+            off += n * itemsize
+        assert off == len(payload), (off, len(payload))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class WireHeader:
+    """Out-of-band message metadata (schema, shapes, provenance).
+
+    Deliberately *not* counted against ``comm_bytes``: it is O(C) ints of
+    negotiated schema, vs O(C·K·d²) payload scalars — the paper's cost model
+    (Eqs. 9-11) counts parameters only, and so do we.
+    """
+    kind: str                      # "gmm" | "head"
+    cov_type: str                  # GMM family ("" for head messages)
+    d: int                         # feature dim
+    K: int                         # mixture components (1 for head)
+    n_classes: int
+    counts: Tuple[int, ...]        # per-class sample counts, len C
+    dtype: str                     # codec dtype the payload was written in
+
+    @property
+    def present(self) -> Tuple[int, ...]:
+        return tuple(int(c) for c in range(self.n_classes)
+                     if self.counts[c] > 0)
+
+
+def _packed_cov_shape(cov_type: str, Cp: int, K: int, d: int):
+    if cov_type == "full":
+        return (Cp, K, d * (d + 1) // 2)
+    if cov_type == "diag":
+        return (Cp, K, d)
+    return (Cp, K)
+
+
+def _pack_cov(cov: np.ndarray, cov_type: str) -> np.ndarray:
+    """(…, d, d) full covariances → lower-triangle scalars; others pass.
+
+    Host-side twin of ``gmm.pack_wire``/``unpack_wire`` — both use the
+    row-major ``tril_indices`` layout, and ``comm_bytes`` (Eqs. 9-11)
+    counts exactly these scalars; change all three together or not at all.
+    """
+    if cov_type != "full":
+        return cov
+    d = cov.shape[-1]
+    i, j = np.tril_indices(d)
+    return cov[..., i, j]
+
+
+def _unpack_cov(packed: np.ndarray, cov_type: str, d: int) -> np.ndarray:
+    if cov_type != "full":
+        return packed
+    i, j = np.tril_indices(d)
+    cov = np.zeros(packed.shape[:-1] + (d, d), np.float32)
+    cov[..., i, j] = packed
+    sym = cov + np.swapaxes(cov, -1, -2)
+    diag_idx = np.arange(d)
+    sym[..., diag_idx, diag_idx] = cov[..., diag_idx, diag_idx]
+    return sym
+
+
+# ---------------------------------------------------------------------------
+# ClientMessage v2 — a pytree whose leaves are the DECODED parameters
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ClientMessage:
+    """v2 wire message: encoded payload + its decoded stacked parameters.
+
+    ``params`` holds the post-round-trip (quantized→dequantized) f32 arrays
+    stacked over the class axis — ``pi (C,K)``, ``mu (C,K,d)``, ``cov
+    (C,K,…)`` for GMM messages, ``w (d,C)`` / ``b (C,)`` for head messages —
+    so a list of homogeneous messages stacks into the server's ``(M, C, K,
+    …)`` batch with one ``tree.map``.  The raw ``payload`` is what crossed
+    the wire; ``comm_bytes == len(payload)`` by construction.
+    """
+    params: Dict[str, jax.Array]
+    logliks: Tuple[float, ...]     # hashable, so treedefs stay jit-safe
+    header: WireHeader
+    payload: bytes
+
+    # -- pytree protocol (params are the traced leaves) --
+    def tree_flatten(self):
+        return (self.params,), (self.logliks, self.header, self.payload)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(params=children[0], logliks=aux[0], header=aux[1],
+                   payload=aux[2])
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.asarray(self.header.counts, np.int64)
+
+    @property
+    def comm_bytes(self) -> int:
+        return len(self.payload)
+
+    def wire_bytes(self, *_a, **_k) -> int:
+        """Drop-in for the v1 accessor: actual encoded payload length."""
+        return len(self.payload)
+
+
+def encode_message(params: Dict, counts, logliks, *, kind: str,
+                   cov_type: str, n_classes: int,
+                   codec: QuantizedCodec) -> ClientMessage:
+    """Client → wire: subset to present classes, quantize, serialize.
+
+    Returns the message carrying both the payload bytes and the decoded
+    (round-tripped) parameters the receiver will actually compute on.
+    """
+    counts = np.asarray(jax.device_get(counts)).astype(np.int64).ravel()
+    params = {k: np.asarray(jax.device_get(v), np.float32)
+              for k, v in params.items()}
+    if kind == "gmm":
+        K, d = params["mu"].shape[-2], params["mu"].shape[-1]
+        present = np.flatnonzero(counts > 0)
+        sub = {"pi": params["pi"][present],
+               "mu": params["mu"][present],
+               "cov": _pack_cov(params["cov"][present], cov_type)}
+        fields = _GMM_FIELDS
+        shapes = {"pi": (len(present), K), "mu": (len(present), K, d),
+                  "cov": _packed_cov_shape(cov_type, len(present), K, d)}
+    elif kind == "head":
+        d = params["w"].shape[0]
+        K = 1
+        sub = {"w": params["w"], "b": params["b"]}
+        fields = _HEAD_FIELDS
+        shapes = {"w": (d, n_classes), "b": (n_classes,)}
+    else:
+        raise ValueError(kind)
+
+    payload = codec.encode(sub, fields)
+    header = WireHeader(kind=kind, cov_type=cov_type if kind == "gmm" else "",
+                        d=int(d), K=int(K), n_classes=int(n_classes),
+                        counts=tuple(int(c) for c in counts),
+                        dtype=codec.dtype)
+    decoded_sub = codec.decode(payload, shapes, fields)
+    if kind == "gmm":
+        C = n_classes
+        decoded = {
+            "pi": np.full((C, K), 1.0 / K, np.float32),
+            "mu": np.zeros((C, K, d), np.float32),
+            "cov": np.zeros((C,) + params["cov"].shape[1:], np.float32),
+        }
+        decoded["pi"][present] = decoded_sub["pi"]
+        decoded["mu"][present] = decoded_sub["mu"]
+        decoded["cov"][present] = _unpack_cov(decoded_sub["cov"], cov_type, d)
+    else:
+        decoded = decoded_sub
+    decoded = {k: jnp.asarray(v) for k, v in decoded.items()}
+    lls = np.asarray(jax.device_get(logliks), np.float32).ravel()
+    return ClientMessage(params=decoded,
+                         logliks=tuple(float(v) for v in lls),
+                         header=header, payload=payload)
+
+
+def stack_messages(messages: Sequence[ClientMessage]) -> Dict[str, jax.Array]:
+    """Homogeneous messages → the server's stacked ``(M, C, K, …)`` batch."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[m.params for m in messages])
+
+
+# ---------------------------------------------------------------------------
+# batched server-side synthesis — ONE jitted sample per round
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("S", "cov_type"))
+def _sample_stacked(key, pi, mu, cov, S: int, cov_type: str) -> jax.Array:
+    """Draw S samples from every mixture in a flat (G, K, …) stack → (G, S, d).
+
+    Keys are folded per mixture slot — distinct, deterministic draws for
+    every (client, class) pair (the v1 loop re-split from one key and
+    correlated clients; see ISSUE 1).
+    """
+    Gn, K = pi.shape
+    d = mu.shape[-1]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(Gn))
+
+    def one(k, p, m, c):
+        kc, kn = jax.random.split(k)
+        logits = jnp.log(jnp.clip(p.astype(jnp.float32), 1e-20))
+        comp = jax.random.categorical(kc, logits, shape=(S,))
+        mm = m.astype(jnp.float32)[comp]                       # (S, d)
+        eps = jax.random.normal(kn, (S, d), jnp.float32)
+        cf = c.astype(jnp.float32)
+        if cov_type == "full":
+            # wire precision (or the DP mechanism) can leave Σ slightly
+            # non-PSD; a clamped eigh factor U·√λ₊ samples N(0, Proj_PSD(Σ))
+            # exactly and never NaNs, unlike a Cholesky
+            evals, evecs = jnp.linalg.eigh(cf)                 # (K,d),(K,d,d)
+            fac = evecs * jnp.sqrt(jnp.maximum(evals, 0.0))[..., None, :]
+            return mm + jnp.einsum("sde,se->sd", fac[comp], eps)
+        if cov_type == "diag":
+            return mm + eps * jnp.sqrt(jnp.maximum(cf[comp], 0.0))
+        return mm + eps * jnp.sqrt(jnp.maximum(cf[comp], 0.0))[:, None]
+
+    return jax.vmap(one)(keys, pi, mu, cov)
+
+
+def synthesize_groups(key, items, samples_per_class: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Pool synthesis over a possibly-heterogeneous cohort.
+
+    ``items``: sequence of ``(params, counts, cov_type)`` per client.
+    Clients with matching (cov_type, param shapes) stack into ONE batched
+    jitted sample call — one group (the homogeneous common case) is one
+    call per round; a mixed-K/cov cohort (paper §6.3) gets one per family.
+    The fold_in per group keeps draws deterministic in sorted-group order.
+    """
+    groups: Dict[Tuple, List] = {}
+    for params, counts, cov_type in items:
+        sig = (cov_type,) + tuple(np.shape(params[f]) for f in _GMM_FIELDS)
+        groups.setdefault(sig, []).append((params, counts))
+    fs, ys = [], []
+    for gi, (sig, members) in enumerate(sorted(groups.items())):
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[p for p, _ in members])
+        counts = np.stack([np.asarray(jax.device_get(c)) for _, c in
+                           members])
+        f, y = synthesize_batched(jax.random.fold_in(key, gi), batch,
+                                  counts, sig[0], samples_per_class)
+        fs.append(f)
+        ys.append(y)
+    return jnp.concatenate(fs), jnp.concatenate(ys)
+
+
+def synthesize_batched(key, batch: Dict[str, jax.Array], counts,
+                       cov_type: str,
+                       samples_per_class: Optional[int] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1, lines 13-16 over the whole cohort in one kernel call.
+
+    ``batch``: pi (M,C,K), mu (M,C,K,d), cov (M,C,K,…) — or the unstacked
+    single-client (C,K,…) layout.  ``counts``: (M,C) sample counts; class
+    slots with 0 are never emitted.  Returns the pooled (N, d) synthetic
+    features and (N,) labels, N = Σ counts (or M·C_present·samples_per_class).
+
+    Cost note: every slot pads to S = max(counts), so a heavily skewed
+    cohort draws up to M·C·S where Σ counts would do.  At this repo's
+    scales (counts ≤ a few hundred) the padded draw is still ≫ faster than
+    per-slot dispatch (benchmarks/synthesize_bench.py); if skew grows,
+    ``samples_per_class`` caps S, and bucketing slots by count magnitude
+    is the next lever (DESIGN.md §2).
+    """
+    counts = np.asarray(jax.device_get(counts), np.int64)
+    if counts.ndim == 1:
+        counts = counts[None]
+        batch = jax.tree.map(lambda a: a[None], batch)
+    M, C = counts.shape
+    n_eff = counts if samples_per_class is None else \
+        np.where(counts > 0, samples_per_class, 0).astype(np.int64)
+    S = int(n_eff.max(initial=0))
+    d = batch["mu"].shape[-1]
+    if S == 0:
+        return (jnp.zeros((0, d), jnp.float32), jnp.zeros((0,), jnp.int32))
+
+    flat = jax.tree.map(lambda a: a.reshape((M * C,) + a.shape[2:]), batch)
+    samples = _sample_stacked(key, flat["pi"], flat["mu"], flat["cov"], S,
+                              cov_type)                        # (M*C, S, d)
+    # compact away the padding rows host-side: one gather, no per-class loop
+    keep = np.arange(S)[None, :] < n_eff.reshape(-1, 1)        # (M*C, S)
+    idx = np.flatnonzero(keep)
+    labels = np.repeat(np.tile(np.arange(C, dtype=np.int32), M), S)[idx]
+    feats = samples.reshape(M * C * S, d)[jnp.asarray(idx)]
+    return feats, jnp.asarray(labels)
+
+
+def synthesize_looped(key, batch: Dict, counts, cov_type: str,
+                      samples_per_class: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Reference per-(client, class) Python loop — the pre-redesign server
+    path, kept for the equivalence tests and ``benchmarks/synthesize_bench``.
+    """
+    counts = np.asarray(jax.device_get(counts), np.int64)
+    if counts.ndim == 1:
+        counts = counts[None]
+        batch = jax.tree.map(lambda a: a[None], batch)
+    M, C = counts.shape
+    feats, labels = [], []
+    for m in range(M):
+        for c in range(C):
+            n = int(counts[m, c])
+            if samples_per_class is not None and n > 0:
+                n = samples_per_class
+            if n <= 0:
+                continue
+            g = jax.tree.map(lambda a: jnp.asarray(a)[m, c], batch)
+            k = jax.random.fold_in(key, m * C + c)
+            feats.append(G.sample(k, g, n, cov_type))
+            labels.append(jnp.full((n,), c, jnp.int32))
+    if not feats:
+        d = np.asarray(batch["mu"]).shape[-1]
+        return jnp.zeros((0, d), jnp.float32), jnp.zeros((0,), jnp.int32)
+    return jnp.concatenate(feats), jnp.concatenate(labels)
+
+
+# ---------------------------------------------------------------------------
+# summarizers — the pluggable "what goes on the wire" slot
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GMMSummarizer:
+    """The paper's summary: one GMM per present class (Algorithm 1, l. 5-10)."""
+    gmm: G.GMMConfig = G.GMMConfig()
+
+    kind = "gmm"
+
+    @property
+    def cov_type(self) -> str:
+        return self.gmm.cov_type
+
+    def summarize(self, key, feats, labels, n_classes: int):
+        gmms, counts, lls = G.fit_classwise_gmms(key, feats, labels,
+                                                 n_classes, self.gmm)
+        return gmms, counts, lls
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadSummarizer:
+    """Head-level summary for the one-shot baselines (AVG/Ensemble/FedBE):
+    the client ships a locally-trained linear head instead of GMMs — same
+    message schema, same codec, different aggregation."""
+    n_steps: int = 150
+    lr: float = 3e-3
+
+    kind = "head"
+    cov_type = ""
+
+    def summarize(self, key, feats, labels, n_classes: int):
+        from repro.fl import baselines as FB
+        k_init, k_train = jax.random.split(key)
+        # drop padding rows (label −1): take_along_axis would wrap them to
+        # the last class and train the head on zero-feature rows
+        keep = np.flatnonzero(np.asarray(jax.device_get(labels)) >= 0)
+        if len(keep) < np.shape(labels)[0]:
+            feats, labels = feats[keep], labels[keep]
+        d = int(feats.shape[1])
+        head = FB.local_train(k_train, H.init_head(k_init, d, n_classes),
+                              feats, labels, n_classes,
+                              n_steps=self.n_steps, lr=self.lr)
+        counts = jnp.sum(jax.nn.one_hot(labels, n_classes), axis=0)
+        return head, counts, jnp.zeros((n_classes,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# topologies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """What a federation round produced."""
+    model: Any                     # global head (star) / per-client heads
+    info: Dict
+    messages: List[ClientMessage]
+
+
+@dataclasses.dataclass(frozen=True)
+class Star:
+    """Clients → server, one shot (Algorithm 1)."""
+    name = "star"
+
+    def run(self, key, session: "FedSession", client_datasets
+            ) -> SessionResult:
+        keys = jax.random.split(key, len(client_datasets) + 1)
+        messages = [
+            session.client_update(k, f, y, i)
+            for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets))
+        ]
+        return session.server_aggregate(keys[0], messages)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    """Linear topology (§4.2, Fig. 5): client 1 → 2 → … → M.  Each client
+    decodes the received message, samples synthetic features from it, unions
+    them with its local data, re-fits, re-encodes, and passes on."""
+    laps: int = 1
+    name = "chain"
+
+    def run(self, key, session: "FedSession", client_datasets
+            ) -> SessionResult:
+        M = len(client_datasets)
+        order = list(range(M)) * self.laps
+        keys = jax.random.split(key, len(order))
+        received = None
+        messages, infos = [], []
+        for k, i in zip(keys, order):
+            f, y = client_datasets[i]
+            msg, info = session.chain_step(k, f, y, i, received)
+            messages.append(msg)
+            infos.append(info)
+            received = msg
+        comm = sum(m.comm_bytes for m in messages)
+        return SessionResult(model=infos[-1]["head"],
+                             info={"comm_bytes": comm, "per_client": infos},
+                             messages=messages)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring(Chain):
+    """Chain with wraparound: after ``laps`` passes every client (including
+    the first) has refit on the accumulated global knowledge."""
+    laps: int = 2
+    name = "ring"
+
+
+# ---------------------------------------------------------------------------
+# FedSession — the orchestrator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSession:
+    """One federation instance: summarizer × codec × topology (× DP).
+
+    >>> sess = FedSession(n_classes=10,
+    ...                   summarizer=GMMSummarizer(G.GMMConfig(5, "diag")))
+    >>> result = sess.run(key, clients)        # doctest: +SKIP
+    >>> result.info["comm_bytes"] == sum(len(m.payload)
+    ...                                  for m in result.messages)
+    """
+    n_classes: int
+    summarizer: Any = GMMSummarizer()
+    codec: QuantizedCodec = QuantizedCodec("bfloat16")
+    topology: Any = Star()
+    head: H.HeadConfig = H.HeadConfig()
+    normalize_features: bool = False
+    dp: Optional[DP.DPConfig] = None
+    samples_per_class: Optional[int] = None
+    aggregate: str = "synthesize"  # "synthesize" | "avg" | "ensemble" | "fedbe"
+    client_summarizers: Optional[Tuple[Any, ...]] = None  # heterogeneous K/cov
+    min_class_count: int = 0       # don't transmit classes below this count
+
+    # -- plumbing -----------------------------------------------------------
+
+    def summarizer_for(self, i: int):
+        if self.client_summarizers is not None:
+            return self.client_summarizers[i]
+        return self.summarizer
+
+    def _normalize(self, feats):
+        if not self.normalize_features:
+            return feats
+        n = jnp.linalg.norm(feats, axis=-1, keepdims=True)
+        return feats / jnp.maximum(n, 1.0)
+
+    # -- client side --------------------------------------------------------
+
+    def client_update(self, key, feats, labels, i: int = 0) -> ClientMessage:
+        """Summarize → (optionally privatize) → encode."""
+        summ = self.summarizer_for(i)
+        k_fit, k_dp = jax.random.split(key)
+        feats = self._normalize(feats)
+        params, counts, lls = summ.summarize(k_fit, feats, labels,
+                                             self.n_classes)
+        if self.min_class_count and summ.kind == "gmm":
+            counts = jnp.where(counts >= self.min_class_count, counts, 0)
+        if self.dp is not None:
+            assert summ.kind == "gmm" and summ.cov_type == "full" \
+                and params["mu"].shape[-2] == 1, \
+                "Theorem 4.1 requires K=1 full-covariance summaries"
+            params = DP.privatize_classwise(k_dp, params, counts, self.dp)
+        return encode_message(params, counts, lls, kind=summ.kind,
+                              cov_type=summ.cov_type,
+                              n_classes=self.n_classes, codec=self.codec)
+
+    def chain_step(self, key, feats, labels, i: int,
+                   received: Optional[ClientMessage]
+                   ) -> Tuple[ClientMessage, Dict]:
+        """One client's turn in a Chain/Ring pass."""
+        if self.dp is not None:
+            # Theorem 4.1's accounting covers one summary of one client's
+            # data; a chain message summarizes a union that includes other
+            # clients' synthetic samples. Refuse rather than emit messages
+            # with an unaccounted (and therefore void) privacy guarantee.
+            raise NotImplementedError(
+                "DP composition is only supported for the Star topology")
+        if self.summarizer_for(i).kind != "gmm":
+            # a head summary can't be "sampled and unioned"; refuse instead
+            # of silently dropping every received message
+            raise NotImplementedError(
+                "Chain/Ring topologies require a GMM summarizer")
+        k_sample, k_fit, k_head = jax.random.split(key, 3)
+        feats = self._normalize(feats)
+        if received is not None and received.header.kind == "gmm":
+            syn_f, syn_y = synthesize_batched(
+                k_sample, received.params, received.counts,
+                received.header.cov_type)
+            if syn_f.shape[0]:
+                feats = jnp.concatenate([feats, syn_f], axis=0)
+                labels = jnp.concatenate([labels, syn_y], axis=0)
+        summ = self.summarizer_for(i)
+        params, counts, lls = summ.summarize(k_fit, feats, labels,
+                                             self.n_classes)
+        if self.min_class_count and summ.kind == "gmm":
+            counts = jnp.where(counts >= self.min_class_count, counts, 0)
+        msg = encode_message(params, counts, lls, kind=summ.kind,
+                             cov_type=summ.cov_type,
+                             n_classes=self.n_classes, codec=self.codec)
+        head_params, _ = H.train_head(k_head, feats, labels, self.n_classes,
+                                      self.head)
+        return msg, {"head": head_params, "n_train": int(feats.shape[0])}
+
+    # -- server side --------------------------------------------------------
+
+    def _synthesize_all(self, key, messages: Sequence[ClientMessage]
+                        ) -> Tuple[jax.Array, jax.Array]:
+        return synthesize_groups(
+            key, [(m.params, m.counts, m.header.cov_type)
+                  for m in messages], self.samples_per_class)
+
+    def server_aggregate(self, key, messages: Sequence[ClientMessage]
+                         ) -> SessionResult:
+        comm = sum(m.comm_bytes for m in messages)
+        info: Dict = {"comm_bytes": comm}
+        kind = messages[0].header.kind
+        if kind == "gmm":
+            k_syn, k_head = jax.random.split(key)
+            feats, labels = self._synthesize_all(k_syn, messages)
+            head_params, losses = H.train_head(k_head, feats, labels,
+                                               self.n_classes, self.head)
+            info.update(synthetic_feats=feats, synthetic_labels=labels,
+                        head_losses=losses)
+            return SessionResult(model=head_params, info=info,
+                                 messages=list(messages))
+        # head-level aggregation (one-shot baselines) — estimators match
+        # the paper's: uniform AVG, FedBE with 10 posterior samples
+        from repro.fl import baselines as FB
+        heads = [m.params for m in messages]
+        if self.aggregate == "avg":
+            model: Any = FB.avg_heads(heads)
+        elif self.aggregate == "ensemble":
+            model = list(heads)
+        elif self.aggregate == "fedbe":
+            model = FB.fedbe(key, heads, n_samples=10)
+        else:
+            raise ValueError(self.aggregate)
+        return SessionResult(model=model, info=info, messages=list(messages))
+
+    # -- entry point --------------------------------------------------------
+
+    def run(self, key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]]
+            ) -> SessionResult:
+        return self.topology.run(key, self, client_datasets)

@@ -1,4 +1,10 @@
-"""Multi-round and one-shot FL baselines over classifier heads."""
+"""Multi-round and one-shot FL baselines over classifier heads.
+
+The one-shot aggregators (``avg_heads`` / ``ensemble_predict`` / ``fedbe``)
+are the server side of ``FedSession(summarizer=HeadSummarizer(), aggregate=
+"avg"|"ensemble"|"fedbe")`` — clients ship codec-encoded heads through the
+same wire path as GMM summaries (fl/api.py, DESIGN.md §2).
+"""
 from __future__ import annotations
 
 import dataclasses

@@ -1,7 +1,7 @@
 """Continuous-batching inference server (CPU-testable, mesh-ready).
 
 Fixed pool of B slots; each slot owns one request's cache/state. Admission
-prefize a prompt into a free slot; every ``step()`` advances ALL active
+prefills a prompt into a free slot; every ``step()`` advances ALL active
 slots with ONE vmapped decode (per-slot absolute positions — requests of
 different lengths coexist). Greedy sampling; slots free on EOS/max-len.
 

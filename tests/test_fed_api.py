@@ -1,0 +1,289 @@
+"""Unified federation API (fl.api): wire-codec round-trip exactness,
+``comm_bytes == len(payload)``, batched-vs-looped synthesis equivalence, and
+end-to-end parity of the centralized / chain / DP / baseline paths through
+``FedSession``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data as D
+from repro.core import decentralized as DC
+from repro.core import dp as DP
+from repro.core import fedpft as FP
+from repro.core import gmm as G
+from repro.core import head as H
+from repro.fl import api as FA
+
+N_CLASSES = 6
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    dcfg = D.DatasetConfig(n_classes=N_CLASSES, n_per_class=120,
+                           input_dim=DIM, class_sep=2.0)
+    return (*D.make_dataset(dcfg), *D.make_dataset(dcfg, split=1))
+
+
+@pytest.fixture(scope="module")
+def fp_cfg():
+    return FP.FedPFTConfig(
+        gmm=G.GMMConfig(n_components=2, cov_type="diag", n_iter=12),
+        head=H.HeadConfig(n_steps=250, lr=3e-3))
+
+
+def _gmm_session(cov="diag", K=2, **kw):
+    return FA.FedSession(
+        n_classes=N_CLASSES,
+        summarizer=FA.GMMSummarizer(
+            G.GMMConfig(n_components=K, cov_type=cov, n_iter=12)),
+        head=H.HeadConfig(n_steps=250, lr=3e-3), **kw)
+
+
+class TestWireCodec:
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_comm_bytes_is_payload_length(self, key, dataset, cov):
+        """Reported bytes are the actual encoded payload — and agree with
+        the paper's Eqs. 9-11 at 16-bit precision."""
+        x, y, *_ = dataset
+        K = 2
+        sess = _gmm_session(cov=cov, K=K)
+        msg = sess.client_update(key, x, y)
+        assert msg.comm_bytes == len(msg.payload)
+        assert msg.comm_bytes == G.comm_bytes(cov, DIM, K, N_CLASSES, 2)
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_encode_decode_reencode_byte_exact(self, key, dataset, cov):
+        """decode(encode(x)) re-encodes to the *identical* byte string —
+        quantization is idempotent after one round trip."""
+        x, y, *_ = dataset
+        sess = _gmm_session(cov=cov)
+        msg = sess.client_update(key, x, y)
+        msg2 = FA.encode_message(
+            {k: np.asarray(v) for k, v in msg.params.items()},
+            msg.counts, msg.logliks, kind="gmm", cov_type=cov,
+            n_classes=N_CLASSES, codec=sess.codec)
+        assert msg2.payload == msg.payload
+        for k in msg.params:
+            np.testing.assert_array_equal(np.asarray(msg.params[k]),
+                                          np.asarray(msg2.params[k]))
+
+    @pytest.mark.parametrize("dtype,bps", [("float16", 2), ("bfloat16", 2),
+                                           ("float32", 4)])
+    def test_codec_precisions(self, key, dataset, dtype, bps):
+        x, y, *_ = dataset
+        codec = FA.QuantizedCodec(dtype)
+        assert codec.bytes_per_scalar == bps
+        sess = _gmm_session(codec=codec)
+        msg = sess.client_update(key, x, y)
+        assert msg.comm_bytes == G.comm_bytes("diag", DIM, 2, N_CLASSES, bps)
+
+    def test_full_cov_layout_matches_gmm_pack_wire(self, key, dataset):
+        """The codec's tril packing and gmm.pack_wire/unpack_wire encode
+        the SAME wire layout — a change to one without the other is a bug
+        (ablations.py still measures precision through pack_wire)."""
+        import ml_dtypes
+        x, y, *_ = dataset
+        g, _ = G.fit_gmm(key, x, jnp.ones(x.shape[0]),
+                         G.GMMConfig(n_components=2, cov_type="full",
+                                     n_iter=5))
+        ref = np.asarray(G.pack_wire(g, "full")["cov"]).astype(np.float32)
+        cod = FA._pack_cov(np.asarray(g["cov"], np.float32), "full") \
+            .astype(ml_dtypes.bfloat16).astype(np.float32)
+        np.testing.assert_array_equal(ref, cod)
+        # and both unpackers rebuild the same symmetric matrix
+        d = g["cov"].shape[-1]
+        ref_up = np.asarray(G.unpack_wire(G.pack_wire(g, "full"), "full",
+                                          d)["cov"])
+        cod_up = FA._unpack_cov(cod, "full", d)
+        np.testing.assert_allclose(ref_up, cod_up, rtol=1e-6, atol=1e-6)
+
+    def test_absent_classes_not_transmitted(self, key, dataset):
+        x, y, *_ = dataset
+        keep = y < 2
+        sess = _gmm_session()
+        msg = sess.client_update(key, x[keep], y[keep])
+        assert msg.comm_bytes == G.comm_bytes("diag", DIM, 2, 2, 2)
+        assert msg.header.present == (0, 1)
+
+    def test_message_is_pytree(self, key, dataset):
+        """v2 messages are registered pytrees: decoded params are leaves,
+        wire payload/header are aux — homogeneous messages stack to the
+        server's (M, C, K, …) layout with one tree.map."""
+        x, y, *_ = dataset
+        sess = _gmm_session()
+        msgs = [sess.client_update(k, x, y)
+                for k in jax.random.split(key, 3)]
+        batch = FA.stack_messages(msgs)
+        assert batch["mu"].shape == (3, N_CLASSES, 2, DIM)
+        # jax sees through the message: tree.map touches only params
+        doubled = jax.tree.map(lambda a: a * 2, msgs[0])
+        np.testing.assert_allclose(np.asarray(doubled.params["mu"]),
+                                   2 * np.asarray(msgs[0].params["mu"]))
+        assert doubled.payload == msgs[0].payload
+        # aux data is hashable, so messages cross jit boundaries directly
+        total = jax.jit(lambda m: m.params["mu"].sum())(msgs[0])
+        np.testing.assert_allclose(float(total),
+                                   float(msgs[0].params["mu"].sum()))
+
+
+class TestBatchedSynthesis:
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_matches_looped_reference(self, key, dataset, cov):
+        """One jitted batched sample ≡ the per-(client, class) loop: same
+        per-class sample counts, matching class-conditional statistics."""
+        x, y, *_ = dataset
+        gmms, counts, _ = G.fit_classwise_gmms(
+            key, x, y, N_CLASSES,
+            G.GMMConfig(n_components=2, cov_type=cov, n_iter=10))
+        batch = jax.tree.map(lambda a: jnp.stack([a, a]), gmms)
+        cnt2 = np.stack([np.asarray(counts)] * 2).astype(np.int64)
+        fb, yb = FA.synthesize_batched(key, batch, cnt2, cov)
+        fl, yl = FA.synthesize_looped(key, batch, cnt2, cov)
+        assert fb.shape == fl.shape
+        np.testing.assert_array_equal(np.sort(np.asarray(yb)),
+                                      np.sort(np.asarray(yl)))
+        for c in range(N_CLASSES):
+            mb = np.mean(np.asarray(fb)[np.asarray(yb) == c], axis=0)
+            ml = np.mean(np.asarray(fl)[np.asarray(yl) == c], axis=0)
+            np.testing.assert_allclose(mb, ml, atol=0.5)
+
+    def test_keys_fold_per_client_and_class(self, key, dataset):
+        """Regression for the v1 key-reuse hazard: two clients holding the
+        SAME mixture must draw different synthetic features."""
+        x, y, *_ = dataset
+        gmms, counts, _ = G.fit_classwise_gmms(
+            key, x, y, N_CLASSES, G.GMMConfig(n_components=2, n_iter=10))
+        batch = jax.tree.map(lambda a: jnp.stack([a, a]), gmms)
+        cnt2 = np.stack([np.asarray(counts)] * 2).astype(np.int64)
+        f, lbl = FA.synthesize_batched(key, batch, cnt2, "diag")
+        half = f.shape[0] // 2
+        assert not np.allclose(np.asarray(f[:half]), np.asarray(f[half:]))
+
+    def test_samples_per_class_override(self, key, dataset):
+        x, y, *_ = dataset
+        gmms, counts, _ = G.fit_classwise_gmms(
+            key, x, y, N_CLASSES, G.GMMConfig(n_components=2, n_iter=10))
+        f, lbl = FA.synthesize_batched(key, gmms, counts, "diag",
+                                       samples_per_class=7)
+        assert f.shape[0] == 7 * N_CLASSES
+        assert np.all(np.bincount(np.asarray(lbl)) == 7)
+
+    def test_empty_counts(self, key, dataset):
+        x, y, *_ = dataset
+        gmms, counts, _ = G.fit_classwise_gmms(
+            key, x, y, N_CLASSES, G.GMMConfig(n_components=2, n_iter=10))
+        f, lbl = FA.synthesize_batched(key, gmms, np.zeros(N_CLASSES), "diag")
+        assert f.shape == (0, DIM) and lbl.shape == (0,)
+
+
+class TestFedSessionPaths:
+    def test_star_matches_pre_redesign_path(self, key, dataset, fp_cfg):
+        """The codec round-trip + batched synthesis must reproduce the
+        pre-redesign (f32 params, python-loop sampling) accuracy within
+        quantization tolerance."""
+        x, y, xt, yt = dataset
+        parts = D.dirichlet_partition(np.asarray(y), 4, beta=0.5)
+        clients = [(x[p], y[p]) for p in parts if len(p) > 10]
+        # pre-redesign reference: v1 fit + looped f32 synthesis + head
+        msgs_v1 = [FP.client_update(k, f, yy, N_CLASSES, fp_cfg)
+                   for k, (f, yy) in zip(jax.random.split(key, len(clients)),
+                                         clients)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[m.gmms for m in msgs_v1])
+        cnts = np.stack([m.counts for m in msgs_v1])
+        sf, sl = FA.synthesize_looped(key, batch, cnts, "diag")
+        head_ref, _ = H.train_head(key, sf, sl, N_CLASSES, fp_cfg.head)
+        acc_ref = float(H.accuracy(head_ref, xt, yt))
+        # redesigned path
+        sess = FP.session_for(N_CLASSES, fp_cfg)
+        res = sess.run(key, clients)
+        acc_new = float(H.accuracy(res.model, xt, yt))
+        assert abs(acc_new - acc_ref) < 0.05, (acc_new, acc_ref)
+        assert res.info["comm_bytes"] == sum(len(m.payload)
+                                             for m in res.messages)
+
+    def test_all_paths_share_message_schema(self, key, dataset, fp_cfg):
+        """Centralized star, decentralized chain, and DP all construct and
+        consume the same encoded v2 ClientMessage through FedSession."""
+        x, y, xt, yt = dataset
+        clients = [(x[y < 3], y[y < 3]), (x[y >= 3], y[y >= 3])]
+        # star
+        head, info = FP.run_fedpft(key, clients, N_CLASSES, fp_cfg)
+        # chain
+        msgs_c, infos_c = DC.run_chain(key, clients, N_CLASSES, fp_cfg)
+        # dp
+        dp_cfg = dataclasses.replace(
+            fp_cfg, gmm=G.GMMConfig(n_components=1, cov_type="full",
+                                    n_iter=8), normalize_features=True)
+        head_dp, info_dp = DP.run_dp_fedpft(
+            key, clients, N_CLASSES, dp_cfg,
+            DP.DPConfig(epsilon=8.0, delta=1e-2))
+        for msgs in (info["messages"], msgs_c, info_dp["messages"]):
+            assert all(isinstance(m, FA.ClientMessage) for m in msgs)
+        for inf, msgs in ((info, info["messages"]), (info_dp,
+                                                     info_dp["messages"])):
+            assert inf["comm_bytes"] == sum(m.comm_bytes for m in msgs)
+        # the star head still learns both label halves
+        acc = float(H.accuracy(head, xt, yt))
+        assert acc > 0.7, acc
+        # chain end accumulates all classes
+        assert int((msgs_c[-1].counts > 0).sum()) == N_CLASSES
+        # DP at generous epsilon stays above chance
+        xn = xt / jnp.maximum(jnp.linalg.norm(xt, axis=-1, keepdims=True),
+                              1.0)
+        assert float(H.accuracy(head_dp, xn, yt)) > 1.5 / N_CLASSES
+
+    def test_ring_topology(self, key, dataset, fp_cfg):
+        """Ring = chain with wraparound: after 2 laps the FIRST client's
+        refit head covers classes it never held locally."""
+        x, y, xt, yt = dataset
+        clients = [(x[y < 3], y[y < 3]), (x[y >= 3], y[y >= 3])]
+        sess = FP.session_for(N_CLASSES, fp_cfg,
+                              topology=FA.Ring(laps=2))
+        res = sess.run(key, clients)
+        assert len(res.messages) == 4        # 2 clients × 2 laps
+        # client 0's second-lap head (index 2) sees the whole label space
+        acc0_lap2 = float(H.accuracy(res.info["per_client"][2]["head"],
+                                     xt, yt))
+        acc0_lap1 = float(H.accuracy(res.info["per_client"][0]["head"],
+                                     xt, yt))
+        assert acc0_lap2 > acc0_lap1 + 0.2, (acc0_lap1, acc0_lap2)
+
+    def test_dp_requires_star_topology(self, key, dataset):
+        """Chain messages summarize a union that includes other clients'
+        samples — Theorem 4.1's accounting doesn't cover that, so the
+        session must refuse rather than transmit un-noised parameters."""
+        x, y, *_ = dataset
+        sess = FA.FedSession(
+            n_classes=N_CLASSES,
+            summarizer=FA.GMMSummarizer(
+                G.GMMConfig(n_components=1, cov_type="full", n_iter=5)),
+            topology=FA.Chain(), normalize_features=True,
+            dp=DP.DPConfig(epsilon=1.0))
+        with pytest.raises(NotImplementedError):
+            sess.run(key, [(x, y)])
+
+    def test_head_summarizer_baselines(self, key, dataset):
+        """One-shot AVG / Ensemble baselines ride the same session, schema,
+        and codec — comm equals the encoded head payload length."""
+        x, y, xt, yt = dataset
+        parts = D.iid_shards(len(y), 3)
+        clients = [(x[p], y[p]) for p in parts]
+        sess = FA.FedSession(
+            n_classes=N_CLASSES,
+            summarizer=FA.HeadSummarizer(n_steps=200, lr=3e-3),
+            aggregate="avg")
+        res = sess.run(key, clients)
+        assert res.info["comm_bytes"] == \
+            3 * (DIM * N_CLASSES + N_CLASSES) * 2
+        acc = float(H.accuracy(res.model, xt, yt))
+        assert acc > 0.6, acc
+        ens = dataclasses.replace(sess, aggregate="ensemble")
+        res_e = ens.run(key, clients)
+        from repro.fl import baselines as FB
+        pred = FB.ensemble_predict(res_e.model, xt)
+        assert float(jnp.mean((pred == yt).astype(jnp.float32))) > 0.6
