@@ -14,6 +14,7 @@ Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   ablations         beyond-paper      EM iters, seeding, wire precision,
                                       heterogeneous per-client K (§6.3)
   synthesize_bench  ISSUE 1           looped vs batched server synthesis
+  em_bench          ISSUE 2           fused batched vs reference E-step
   roofline_report   deliverable (g)   dry-run roofline table
 """
 from __future__ import annotations
@@ -27,7 +28,7 @@ from benchmarks import common as C
 
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
-           "frontier", "roofline_report"]
+           "em_bench", "frontier", "roofline_report"]
 
 
 def main(argv=None) -> None:

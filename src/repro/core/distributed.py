@@ -2,8 +2,10 @@
 collectives (DESIGN.md §5).
 
 ``shard_map`` over the "data" axis: each shard owns I/shards clients, runs
-feature-space EM locally (vmap over clients × classes), packs the bf16
-wire pytree, and ``all_gather``s it — the all_gather IS the one-shot
+feature-space EM locally (ONE batched fit over the clients × classes
+stack — a single fused E-step program per EM iteration, DESIGN.md §8,
+with per-shard-offset PRNG seeds so no two clients share a key), packs
+the bf16 wire pytree, and ``all_gather``s it — the all_gather IS the one-shot
 communication round, so the dry-run HLO shows exactly Eqs. 9-11 worth of
 bytes on the wire (vs an all_gather of raw features for the Centralized
 baseline). The server side (sampling + head training) then runs
@@ -26,6 +28,17 @@ except ImportError:  # pragma: no cover
     from jax.shard_map import shard_map
 
 
+def client_seeds(shard, I_local: int, seed: int) -> jax.Array:
+    """Globally-unique per-client PRNG seeds for one shard.
+
+    shard i owns clients [i·I_local, (i+1)·I_local) — disjoint across the
+    "data" axis, and equal to the host-level ``PRNGKey(j + seed)`` layout
+    when there is a single shard.
+    """
+    return (jnp.arange(I_local, dtype=jnp.uint32)
+            + jnp.uint32(shard) * jnp.uint32(I_local) + jnp.uint32(seed))
+
+
 def fedpft_transfer(mesh, feats: jax.Array, labels: jax.Array,
                     n_classes: int, cfg: G.GMMConfig, seed: int = 0):
     """One-shot FedPFT round over a client-sharded dataset.
@@ -41,15 +54,17 @@ def fedpft_transfer(mesh, feats: jax.Array, labels: jax.Array,
     def local(f, y):
         # f: (I_local, N, d); y: (I_local, N)
         I_local = f.shape[0]
+        shard = jax.lax.axis_index("data").astype(jnp.uint32)
+        # offset by the shard's global client base — without it client j on
+        # every shard fit with the identical PRNGKey(j + seed)
         keys = jax.vmap(jax.random.PRNGKey)(
-            jnp.arange(I_local, dtype=jnp.uint32) + seed)
+            client_seeds(shard, I_local, seed))
 
-        def fit_client(k, fc, yc):
-            gmms, counts, _ = G.fit_classwise_gmms(k, fc, yc, n_classes,
-                                                   cfg)
-            return G.pack_wire(gmms, cfg.cov_type), counts
-
-        packed, counts = jax.vmap(fit_client)(keys, f, y)
+        # the whole (I_local × C) stack of EM fits is one batched program
+        # (a single pallas_call per EM iteration on TPU — DESIGN.md §8)
+        gmms, counts, _ = G.fit_classwise_gmms_batched(keys, f, y,
+                                                       n_classes, cfg)
+        packed = G.pack_wire(gmms, cfg.cov_type)
         # ---- the one-shot transfer: GMM parameters cross the mesh ----
         gathered = jax.tree.map(
             lambda a: jax.lax.all_gather(a, "data", axis=0, tiled=True),

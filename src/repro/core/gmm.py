@@ -3,6 +3,10 @@
 Replaces sklearn's ``GaussianMixture`` with a jit/vmap-compatible
 fixed-iteration EM so that *per-client × per-class* fits batch into one
 compiled SPMD program (the paper's Algorithm 1, line 8, reshaped for TPU).
+The diag/spher E-step inside that program is the Pallas kernel path
+(``kernels.ops.gmm_estep_fused`` — Pallas on TPU, XLA reference on CPU):
+one fused call per EM iteration covers the whole stack of fits and emits
+log-numerators + row logsumexp together (DESIGN.md §8).
 
 Covariance families (paper §3): ``full`` | ``diag`` | ``spher``.
 
@@ -23,6 +27,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 COV_TYPES = ("full", "diag", "spher")
 _LOG2PI = jnp.log(2.0 * jnp.pi)
 
@@ -40,8 +46,9 @@ class GMMConfig:
 
 
 # ---------------------------------------------------------------------------
-# log-density  (E-step hot path — see kernels/gmm_estep.py for the Pallas
-# version of the diag/spher branch; this is the reference used by default)
+# log-density  (reference semantics + the full-covariance E-step; the
+# diag/spher EM hot path dispatches through kernels/ops.gmm_estep_fused —
+# see _estep_lr below and DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
 
@@ -93,12 +100,16 @@ def log_prob(x: jax.Array, gmm: Dict, cov_type: str) -> jax.Array:
 def _kmeans_init(key, x, weights, cfg: GMMConfig):
     N, d = x.shape
     K = cfg.n_components
-    # sample K seed points ∝ weights (with replacement; deterministic)
-    p = weights / jnp.maximum(jnp.sum(weights), 1e-12)
-    idx = jax.random.choice(key, N, (K,), p=p, replace=True)
+    k_choice, k_jitter = jax.random.split(key)
+    # sample K seed points ∝ weights (with replacement; deterministic);
+    # an all-zero weight vector (absent class under vmap) falls back to
+    # uniform — jax.random.choice with p summing to 0 is unspecified
+    total = jnp.sum(weights)
+    p = jnp.where(total > 0, weights / jnp.maximum(total, 1e-12), 1.0 / N)
+    idx = jax.random.choice(k_choice, N, (K,), p=p, replace=True)
     mu = x[idx]                                               # (K,d)
     # jitter identical seeds apart so empty clusters don't collapse EM
-    mu = mu + 1e-3 * jax.random.normal(key, mu.shape, x.dtype)
+    mu = mu + 1e-3 * jax.random.normal(k_jitter, mu.shape, x.dtype)
 
     def step(mu, _):
         d2 = (jnp.sum(jnp.square(x), -1, keepdims=True)
@@ -155,55 +166,122 @@ def _m_step(x, resp, cfg: GMMConfig):
     return {"pi": pi, "mu": mu, "cov": cov}
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+def _estep_lr(x, xb, gmm, cov_type: str):
+    """Fused E-step: log-numerators lr (B,N,K) + row logsumexp (B,N).
+
+    diag/spher dispatch through ``ops.gmm_estep_fused`` (Pallas on TPU,
+    XLA reference on CPU — DESIGN.md §8) on the compact shared-x block
+    ``x`` (Bx, N, d); full covariance stays on the Cholesky XLA path,
+    vmapped over the pre-expanded ``xb`` (B, N, d).
+    """
+    if cov_type == "full":
+        comp = jax.vmap(lambda xx, g: log_prob_components(
+            xx, g, cov_type))(xb, gmm)
+        lr = comp + jnp.log(jnp.clip(gmm["pi"], 1e-20))[..., None, :]
+        return lr, jax.scipy.special.logsumexp(lr, axis=-1)
+    return ops.gmm_estep_fused(x, gmm["mu"], gmm["cov"], gmm["pi"])
+
+
+def fit_gmm_batch(keys, x: jax.Array, weights: jax.Array,
+                  cfg: GMMConfig) -> Tuple[Dict, jax.Array]:
+    """Weighted EM over a stack of B fits in one compiled program.
+
+    keys: (B,) PRNG keys; weights: (B, N); x: (Bx, N, d) with
+    B % Bx == 0 — each run of B // Bx consecutive fits shares one feature
+    block (e.g. one client's features fit per-class, Bx = clients,
+    B = clients × classes). A zero weight row masks that sample; an
+    all-zero weight vector (absent class) still returns finite params.
+
+    The diag/spher E-step of ALL B fits is ONE ``ops.gmm_estep_fused``
+    call per EM iteration — a single ``pallas_call`` on TPU — instead of
+    vmap-over-reference. Init and M-step are vmapped XLA.
+
+    Returns (gmms stacked (B, …), mean logliks (B,)).
+    """
+    # the dispatch state is a static jit arg: a use_pallas() flip after a
+    # same-shape fit must retrace, not silently reuse the old backend
+    return _fit_gmm_batch(keys, x, weights, cfg, ops.backend())
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def _fit_gmm_batch(keys, x, weights, cfg: GMMConfig, backend):
+    B = weights.shape[0]
+    x = x.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    xb = jnp.broadcast_to(x[:, None], (x.shape[0], B // x.shape[0])
+                          + x.shape[1:]).reshape((B,) + x.shape[1:])
+
+    mu0 = jax.vmap(lambda k, xx, ww: _kmeans_init(k, xx, ww, cfg))(
+        keys, xb, weights)
+    gmm0 = {
+        "pi": jnp.full((B, cfg.n_components), 1.0 / cfg.n_components),
+        "mu": mu0,
+        "cov": jax.vmap(lambda xx, ww, m: _global_cov(xx, ww, cfg, m))(
+            xb, weights, mu0),
+    }
+    wsum = jnp.maximum(jnp.sum(weights, axis=-1), 1e-12)      # (B,)
+
+    def em_iter(gmm, _):
+        lr, norm = _estep_lr(x, xb, gmm, cfg.cov_type)
+        resp = jnp.exp(lr - norm[..., None]) * weights[..., None]
+        ll = jnp.sum(norm * weights, axis=-1) / wsum
+        gmm = jax.vmap(lambda xx, rr: _m_step(xx, rr, cfg))(xb, resp)
+        return gmm, ll
+
+    gmm, lls = jax.lax.scan(em_iter, gmm0, None, length=cfg.n_iter)
+    # final loglik under the *returned* parameters — the fused E-step's
+    # logsumexp IS the mixture log-density, no extra pass needed
+    _, norm = _estep_lr(x, xb, gmm, cfg.cov_type)
+    final_ll = jnp.sum(norm * weights, axis=-1) / wsum
+    return gmm, final_ll
+
+
 def fit_gmm(key, x: jax.Array, weights: jax.Array,
             cfg: GMMConfig) -> Tuple[Dict, jax.Array]:
     """Weighted EM. x: (N,d); weights: (N,) nonneg (0 masks a row).
 
     Returns (gmm, mean_loglik) where mean_loglik is the weighted mean
     log-likelihood of the final model — the paper's ``L_EM`` (§6.2).
+    The B=1 case of :func:`fit_gmm_batch` (same compiled path).
     """
-    x = x.astype(jnp.float32)
-    weights = weights.astype(jnp.float32)
-    mu0 = _kmeans_init(key, x, weights, cfg)
-    gmm0 = {
-        "pi": jnp.full((cfg.n_components,), 1.0 / cfg.n_components),
-        "mu": mu0,
-        "cov": _global_cov(x, weights, cfg, mu0),
-    }
+    gmm, ll = fit_gmm_batch(key[None], x[None], weights[None], cfg)
+    return jax.tree.map(lambda a: a[0], gmm), ll[0]
 
-    def em_iter(gmm, _):
-        comp = log_prob_components(x, gmm, cfg.cov_type)
-        logpi = jnp.log(jnp.clip(gmm["pi"], 1e-20))
-        lr = comp + logpi[None]
-        norm = jax.scipy.special.logsumexp(lr, axis=-1, keepdims=True)
-        resp = jnp.exp(lr - norm) * weights[:, None]
-        ll = jnp.sum(norm[:, 0] * weights) / jnp.maximum(jnp.sum(weights),
-                                                         1e-12)
-        return _m_step(x, resp, cfg), ll
 
-    gmm, lls = jax.lax.scan(em_iter, gmm0, None, length=cfg.n_iter)
-    # final loglik under the *returned* parameters
-    final_ll = jnp.sum(log_prob(x, gmm, cfg.cov_type) * weights) \
-        / jnp.maximum(jnp.sum(weights), 1e-12)
-    return gmm, final_ll
+def fit_classwise_gmms_batched(keys, feats: jax.Array, labels: jax.Array,
+                               n_classes: int, cfg: GMMConfig):
+    """Per-class GMMs for a whole client cohort in one batched EM.
+
+    keys: (M,) per-client keys; feats: (M, N, d); labels: (M, N) with −1
+    padding. The (M × C) stack of fits shares each client's feature block
+    — one ``pallas_call`` per EM iteration for the entire cohort.
+
+    Returns (gmms stacked (M, C, …), counts (M, C), logliks (M, C)).
+    """
+    M = feats.shape[0]
+    onehot = jax.nn.one_hot(labels, n_classes)                # (M,N,C)
+    counts = jnp.sum(onehot, axis=1)                          # (M,C)
+    keys_mc = jax.vmap(lambda k: jax.random.split(k, n_classes))(keys)
+    weights = jnp.swapaxes(onehot, 1, 2).reshape(M * n_classes, -1)
+    gmms, lls = fit_gmm_batch(keys_mc.reshape((M * n_classes,)
+                                              + keys_mc.shape[2:]),
+                              feats, weights, cfg)
+    gmms = jax.tree.map(
+        lambda a: a.reshape((M, n_classes) + a.shape[1:]), gmms)
+    return gmms, counts, lls.reshape(M, n_classes)
 
 
 def fit_classwise_gmms(key, feats: jax.Array, labels: jax.Array,
                        n_classes: int, cfg: GMMConfig):
-    """One GMM per class via vmap (Algorithm 1, lines 6-9, batched).
+    """One GMM per class (Algorithm 1, lines 6-9, batched).
 
     Returns (gmms stacked over class axis, counts (C,), logliks (C,)).
-    Classes with zero samples get pi=uniform/mu=0 — mask with counts.
+    Classes with zero samples get finite placeholder params — mask with
+    counts. The M=1 case of :func:`fit_classwise_gmms_batched`.
     """
-    onehot = jax.nn.one_hot(labels, n_classes)                # (N,C)
-    counts = jnp.sum(onehot, axis=0)
-    keys = jax.random.split(key, n_classes)
-
-    def fit_one(k, w):
-        return fit_gmm(k, feats, w, cfg)
-    gmms, lls = jax.vmap(fit_one)(keys, onehot.T)
-    return gmms, counts, lls
+    gmms, counts, lls = fit_classwise_gmms_batched(
+        key[None], feats[None], labels[None], n_classes, cfg)
+    return jax.tree.map(lambda a: a[0], gmms), counts[0], lls[0]
 
 
 # ---------------------------------------------------------------------------

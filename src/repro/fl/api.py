@@ -398,7 +398,14 @@ def synthesize_looped(key, batch: Dict, counts, cov_type: str,
 
 @dataclasses.dataclass(frozen=True)
 class GMMSummarizer:
-    """The paper's summary: one GMM per present class (Algorithm 1, l. 5-10)."""
+    """The paper's summary: one GMM per present class (Algorithm 1, l. 5-10).
+
+    The per-class EM stack runs as ONE batched fit
+    (``gmm.fit_classwise_gmms`` → ``fit_gmm_batch``): the diag/spher
+    E-step of all C fits is a single ``kernels.ops.gmm_estep_fused``
+    call per iteration — the Pallas kernel on TPU, its XLA reference on
+    CPU (DESIGN.md §8).
+    """
     gmm: G.GMMConfig = G.GMMConfig()
 
     kind = "gmm"

@@ -5,12 +5,9 @@ on this CPU container the Pallas path runs in interpret mode.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gmm_estep import estep
+from repro.kernels.gmm_estep import estep, estep_fused
 from repro.kernels.ssd import ssd as ssd_kernel
 from repro.kernels.wkv6 import wkv6 as wkv6_kernel
 
@@ -22,12 +19,38 @@ def use_pallas(enable: bool = True, interpret: bool = True):
     _STATE["interpret"] = interpret
 
 
+def backend():
+    """Hashable snapshot of the dispatch state.
+
+    Callers that trace ops.* inside their own ``jit`` must pass this as a
+    static argument so their cache keys on the backend — otherwise a
+    ``use_pallas`` flip after the first trace is silently ignored
+    (core/gmm.fit_gmm_batch does this)."""
+    return (_STATE["use_pallas"], _STATE["interpret"])
+
+
 def gmm_estep(x, mu, var, pi):
-    """(N,d) × (K,d) diag/spher E-step numerators → (N,K)."""
+    """(N,d) × (K,d) diag/spher E-step numerators → (N,K).
+
+    ``var`` is diag (K, d) or spher (K,) — both backends expand spher
+    internally (the old fallback's ``broadcast_to((K,) → (K, d))`` raised).
+    """
     if _STATE["use_pallas"]:
         return estep(x, mu, var, pi, interpret=_STATE["interpret"])
-    K, d = mu.shape[0], x.shape[-1]
-    return ref.estep_ref(x, mu, jnp.broadcast_to(var, (K, d)), pi)
+    return ref.estep_ref(x, mu, var, pi)
+
+
+def gmm_estep_fused(x, mu, var, pi):
+    """Fused batched E-step → (log-numerators (…,N,K), row logsumexp (…,N)).
+
+    The EM production path (core/gmm.fit_gmm_batch): one call covers a
+    whole (B = clients × classes) stack of fits — x may be (Bx, N, d)
+    shared by B // Bx consecutive fits — and responsibilities + ``L_EM``
+    come out of one tiled pass.
+    """
+    if _STATE["use_pallas"]:
+        return estep_fused(x, mu, var, pi, interpret=_STATE["interpret"])
+    return ref.estep_fused_ref(x, mu, var, pi)
 
 
 def attention(q, k, v, *, causal=True, window=0, prefix=0):

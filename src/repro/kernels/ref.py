@@ -15,26 +15,65 @@ import jax.numpy as jnp
 _LOG2PI = math.log(2.0 * math.pi)
 
 
+def _expand_var(var: jax.Array, mu: jax.Array) -> jax.Array:
+    """spher (…, K) → diag (…, K, d); diag passes through."""
+    var = var.astype(jnp.float32)
+    if var.ndim == mu.ndim - 1:
+        var = var[..., None]
+    return jnp.broadcast_to(var, mu.shape)
+
+
 def estep_ref(x: jax.Array, mu: jax.Array, var: jax.Array,
               pi: jax.Array) -> jax.Array:
-    """Diag-covariance E-step log-responsibility numerators.
+    """Diag/spher E-step log-responsibility numerators.
 
-    x: (N, d) f32; mu: (K, d); var: (K, d) (diag Σ); pi: (K,).
-    Returns log[π_k N(x_n | μ_k, Σ_k)]: (N, K) f32.
-
-    spher is the var = broadcast-to-(K, d) special case.
+    x: (…, N, d) f32; mu: (…, K, d); var: diag (…, K, d) or spher (…, K);
+    pi: (…, K). Returns log[π_k N(x_n | μ_k, Σ_k)]: (…, N, K) f32.
+    Leading batch dims broadcast elementwise.
     """
     x = x.astype(jnp.float32)
     mu = mu.astype(jnp.float32)
-    var = var.astype(jnp.float32)
+    var = _expand_var(var, mu)
     d = x.shape[-1]
     inv = 1.0 / var
-    maha = (jnp.square(x) @ inv.T
-            - 2.0 * (x @ (mu * inv).T)
-            + jnp.sum(jnp.square(mu) * inv, axis=-1)[None])
+    maha = (jnp.einsum("...nd,...kd->...nk", jnp.square(x), inv)
+            - 2.0 * jnp.einsum("...nd,...kd->...nk", x, mu * inv)
+            + jnp.sum(jnp.square(mu) * inv, axis=-1)[..., None, :])
     logdet = jnp.sum(jnp.log(var), axis=-1)
-    logp = -0.5 * (d * _LOG2PI + logdet[None] + maha)
-    return logp + jnp.log(jnp.clip(pi.astype(jnp.float32), 1e-20))[None]
+    logp = -0.5 * (d * _LOG2PI + logdet[..., None, :] + maha)
+    logpi = jnp.log(jnp.clip(pi.astype(jnp.float32), 1e-20))
+    return logp + logpi[..., None, :]
+
+
+def estep_fused_ref(x: jax.Array, mu: jax.Array, var: jax.Array,
+                    pi: jax.Array):
+    """Oracle for the fused kernel: (log-numerators, their row logsumexp).
+
+    Accepts the kernel's shared-x batching — x (Bx, N, d) against
+    mu (B, K, d) with B % Bx == 0 — as well as plain 2D inputs.
+    Returns ((…, N, K), (…, N)).
+
+    Shared-x batches fold the r = B // Bx fits per feature block into one
+    widened (N, d) @ (d, r·K) contraction rather than materializing an
+    (B, N, d) expansion of x — this IS the production XLA fallback of
+    ``ops.gmm_estep_fused``, so its GEMM shape matters, not just its math.
+    """
+    if mu.ndim == 3 and x.ndim == 2:     # one feature block, shared by all
+        x = x[None]
+    if mu.ndim == 3 and x.shape[0] != mu.shape[0]:
+        B, K, d = mu.shape
+        Bx, N = x.shape[0], x.shape[1]
+        assert B % Bx == 0, \
+            f"batch {B} must be a multiple of the {Bx} shared feature blocks"
+        r = B // Bx
+        var = _expand_var(var, mu)
+        fold = lambda a: a.reshape((Bx, r * K) + a.shape[2:])  # noqa: E731
+        logp = estep_ref(x, fold(mu), fold(var), fold(pi))     # (Bx,N,r·K)
+        logp = logp.reshape(Bx, N, r, K).transpose(0, 2, 1, 3) \
+            .reshape(B, N, K)
+    else:
+        logp = estep_ref(x, mu, var, pi)
+    return logp, jax.scipy.special.logsumexp(logp, axis=-1)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -48,6 +48,7 @@ class TestArchSmoke:
         assert feats.shape == (B, cfg.d_model)
         assert bool(jnp.all(jnp.isfinite(feats)))
 
+    @pytest.mark.slow
     def test_one_train_step(self, key, arch):
         cfg = get_config(arch).reduced()
         params = M.init_params(cfg, key)
@@ -65,6 +66,7 @@ class TestArchSmoke:
                                     jax.tree.leaves(p2)))
         assert delta > 0
 
+    @pytest.mark.slow
     def test_loss_decreases_few_steps(self, key, arch):
         cfg = get_config(arch).reduced()
         params = M.init_params(cfg, key)
@@ -83,6 +85,7 @@ DECODE_ARCHS = [a for a in ALL_ARCHS
                 if get_config(a).has_decode]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", DECODE_ARCHS)
 def test_decode_matches_full_forward(key, arch):
     """prefill(S) + decode(1) == forward(S+1) at the last position."""

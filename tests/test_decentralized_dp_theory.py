@@ -34,6 +34,7 @@ def fp_cfg():
         head=H.HeadConfig(n_steps=250, lr=3e-3))
 
 
+@pytest.mark.slow
 class TestDecentralized:
     def test_chain_accumulates_knowledge(self, key, dataset, fp_cfg):
         """Figure 6: accuracy improves along the chain when each client
@@ -82,6 +83,7 @@ class TestDP:
         assert float(jnp.max(jnp.abs(mu_t - mu))) < 0.01
         assert float(jnp.max(jnp.abs(cov_t - cov))) < 0.01
 
+    @pytest.mark.slow
     def test_dp_fedpft_end_to_end(self, key, dataset):
         """DP-FedPFT (K=1 full cov, normalized features) stays usable at
         ε=1 and degrades vs non-private — but beats chance."""

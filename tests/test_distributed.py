@@ -39,6 +39,23 @@ def test_transfer_matches_direct_fit(key, mesh):
                                       np.asarray(cnt))
 
 
+def test_client_seeds_disjoint_across_shards():
+    """Regression for the cross-shard PRNG collision: every shard used to
+    seed with ``arange(I_local) + seed``, so client j on shard 0 and
+    client j on shard 1 fit with IDENTICAL keys. Seeds must be globally
+    unique and match the host-level layout on shard 0."""
+    I_local, seed, n_shards = 4, 7, 3
+    all_seeds = [np.asarray(DF.client_seeds(s, I_local, seed))
+                 for s in range(n_shards)]
+    flat = np.concatenate(all_seeds)
+    assert len(np.unique(flat)) == n_shards * I_local
+    np.testing.assert_array_equal(
+        all_seeds[0], np.arange(I_local, dtype=np.uint32) + seed)
+    # shard s owns the contiguous global client block [s·I, (s+1)·I)
+    np.testing.assert_array_equal(
+        flat, np.arange(n_shards * I_local, dtype=np.uint32) + seed)
+
+
 def test_raw_transfer_roundtrip(key, mesh):
     feats = jax.random.normal(key, (2, 16, 8))
     labels = jax.random.randint(key, (2, 16), 0, 4)

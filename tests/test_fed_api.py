@@ -180,6 +180,7 @@ class TestBatchedSynthesis:
         assert f.shape == (0, DIM) and lbl.shape == (0,)
 
 
+@pytest.mark.slow
 class TestFedSessionPaths:
     def test_star_matches_pre_redesign_path(self, key, dataset, fp_cfg):
         """The codec round-trip + batched synthesis must reproduce the
@@ -252,6 +253,33 @@ class TestFedSessionPaths:
         acc0_lap1 = float(H.accuracy(res.info["per_client"][0]["head"],
                                      xt, yt))
         assert acc0_lap2 > acc0_lap1 + 0.2, (acc0_lap1, acc0_lap2)
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_empty_class_cohort_nan_free(self, key, dataset, cov):
+        """A cohort where one client holds NO samples of some class must
+        stay NaN-free end-to-end: the empty slot's EM fit (all-zero
+        weights under the batched classwise fit) is finite, its message
+        encodes/decodes finite params, and pooled synthesis + head
+        training never see a NaN."""
+        x, y, xt, yt = dataset
+        clients = [(x[y < 3], y[y < 3]),            # classes 3.. absent
+                   (x[y >= 2], y[y >= 2])]          # classes 0-1 absent
+        sess = _gmm_session(cov=cov, K=2)
+        keys = jax.random.split(key, 3)
+        msgs = [sess.client_update(k, f, yy, i)
+                for i, (k, (f, yy)) in enumerate(zip(keys[1:], clients))]
+        for m in msgs:
+            assert 0 in {int(c) for c in m.header.counts}
+            for leaf in jax.tree.leaves(m.params):
+                assert np.isfinite(np.asarray(leaf)).all(), cov
+        res = sess.server_aggregate(keys[0], msgs)
+        sf = res.info["synthetic_feats"]
+        assert np.isfinite(np.asarray(sf)).all()
+        for leaf in jax.tree.leaves(res.model):
+            assert np.isfinite(np.asarray(leaf)).all()
+        # every class is represented by at least one client's synthesis
+        assert set(np.unique(np.asarray(res.info["synthetic_labels"]))) \
+            == set(range(N_CLASSES))
 
     def test_dp_requires_star_topology(self, key, dataset):
         """Chain messages summarize a union that includes other clients'

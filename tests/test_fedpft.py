@@ -31,6 +31,7 @@ def fp_cfg():
         head=H.HeadConfig(n_steps=300, lr=3e-3))
 
 
+@pytest.mark.slow
 class TestCentralizedFedPFT:
     def test_close_to_centralized_dirichlet(self, key, dataset, fp_cfg):
         x, y, xt, yt = dataset

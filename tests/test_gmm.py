@@ -93,6 +93,35 @@ class TestEMCorrectness:
         assert lls[0] <= lls[1] + 1e-3 and lls[1] <= lls[2] + 1e-3
 
 
+class TestAbsentClassEM:
+    """EM over an all-zero weight vector (an empty class slot under the
+    batched classwise fit) must return finite parameters — the padded slot
+    is masked by counts downstream, but NaNs would poison the whole
+    (M, C, K, …) stack."""
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_zero_weights_finite(self, key, cov):
+        x, _, _ = _mixture_data()
+        cfg = G.GMMConfig(n_components=3, cov_type=cov, n_iter=10)
+        g, ll = G.fit_gmm(key, x, jnp.zeros(x.shape[0]), cfg)
+        for f in ("pi", "mu", "cov"):
+            assert np.isfinite(np.asarray(g[f])).all(), (cov, f)
+        assert np.isfinite(float(ll))
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_classwise_with_empty_class(self, key, cov):
+        x, _, comp = _mixture_data()
+        labels = jnp.where(jnp.asarray(comp) == 2, 0,
+                           jnp.asarray(comp))     # class 2 never occurs
+        gmms, counts, lls = G.fit_classwise_gmms(
+            key, x, labels, 3,
+            G.GMMConfig(n_components=2, cov_type=cov, n_iter=8))
+        assert int(counts[2]) == 0
+        for leaf in jax.tree.leaves(gmms):
+            assert np.isfinite(np.asarray(leaf)).all(), cov
+        assert np.isfinite(np.asarray(lls)).all()
+
+
 class TestClasswise:
     def test_vmap_over_classes(self, key):
         x, centers, comp = _mixture_data()
@@ -106,6 +135,28 @@ class TestClasswise:
             err = float(jnp.min(jnp.linalg.norm(
                 gmms["mu"][c] - centers[c], axis=-1)))
             assert err < 1.0, (c, err)
+
+    def test_batched_cohort_matches_single_client(self, key):
+        """fit_classwise_gmms_batched over M clients == per-client fits
+        (same keys, one pallas_call-sized EM stack)."""
+        x, _, comp = _mixture_data()
+        feats = jnp.stack([x, x[::-1]])
+        labels = jnp.stack([jnp.asarray(comp), jnp.asarray(comp[::-1])])
+        keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+        cfg = G.GMMConfig(n_components=2, cov_type="diag", n_iter=8)
+        gmB, cB, lB = G.fit_classwise_gmms_batched(keys, feats, labels, 3,
+                                                   cfg)
+        assert gmB["mu"].shape == (2, 3, 2, x.shape[1])
+        for m in range(2):
+            gm, cnt, ll = G.fit_classwise_gmms(keys[m], feats[m],
+                                               labels[m], 3, cfg)
+            np.testing.assert_array_equal(np.asarray(cB[m]),
+                                          np.asarray(cnt))
+            np.testing.assert_allclose(np.asarray(gmB["mu"][m]),
+                                       np.asarray(gm["mu"]),
+                                       rtol=2e-3, atol=2e-3)
+            np.testing.assert_allclose(np.asarray(lB[m]), np.asarray(ll),
+                                       rtol=1e-4, atol=1e-4)
 
     def test_negative_labels_are_padding(self, key):
         x, _, comp = _mixture_data()
@@ -175,6 +226,7 @@ class TestWireAndCost:
             assert n == G.n_parameters(cov, d, K, 1)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(N=st.integers(20, 200), d=st.integers(1, 16), K=st.integers(1, 5),
        cov=st.sampled_from(["diag", "spher", "full"]))

@@ -40,6 +40,7 @@ def test_batched_equals_sequential(model):
         np.testing.assert_array_equal(np.asarray(out[i]), ref[i])
 
 
+@pytest.mark.slow
 def test_more_requests_than_slots(model):
     cfg, params = model
     prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (4 + i,), 0,

@@ -59,6 +59,7 @@ def test_nonzero_state(key):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(Bt=st.integers(1, 2), H=st.integers(1, 3), nc=st.integers(1, 3),
        N=st.sampled_from([4, 16]), P=st.sampled_from([8, 32]))

@@ -197,6 +197,7 @@ class TestHloCost:
 
 
 class TestTrainStep:
+    @pytest.mark.slow
     def test_microbatch_equivalent_grads(self, key):
         """Grad accumulation over microbatches ≈ full-batch step."""
         cfg = get_config("granite-3-2b").reduced()

@@ -38,6 +38,7 @@ def _spec_leaves(specs):
     return jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
 
 
+@pytest.mark.slow
 class TestFullPipeline:
     def test_backbone_features_to_fedpft(self, key):
         """The paper's actual pipeline: a (tiny) transformer backbone is the

@@ -68,6 +68,7 @@ def test_nonzero_initial_state(key):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(B=st.integers(1, 2), H=st.integers(1, 3),
        nc=st.integers(1, 4), Dh=st.sampled_from([8, 16, 32]))
