@@ -13,7 +13,9 @@ Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   comm_cost         Eqs. 9-11         cost model + measured wire bytes
   ablations         beyond-paper      EM iters, seeding, wire precision,
                                       heterogeneous per-client K (§6.3)
-  synthesize_bench  ISSUE 1           looped vs batched server synthesis
+  synthesize_bench  ISSUE 1/3         looped vs batched server synthesis,
+                                      plus the skewed-cohort (1→4096
+                                      counts) planner-vs-monolithic A/B
   em_bench          ISSUE 2           fused batched vs reference E-step
   roofline_report   deliverable (g)   dry-run roofline table
 """

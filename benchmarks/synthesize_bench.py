@@ -1,14 +1,24 @@
-"""Micro-benchmark: looped vs batched server-side synthesis (ISSUE 1).
+"""Micro-benchmark: looped vs monolithic-padded vs planned synthesis.
 
 The v1 server sampled with an O(clients × classes) Python loop — one device
-dispatch per (client, class) mixture. The redesigned path
-(``fl.api.synthesize_batched``) is ONE jitted sample over the stacked
-(M, C, K, …) GMM tensor plus a single host-side gather. This bench sweeps
-the clients × classes grid and reports both, with the batched path expected
-to win from ~10 × 10 up.
+dispatch per (client, class) mixture. ISSUE 1 replaced it with one jitted
+sample over the stacked (M, C, K, …) tensor, padded to S = max(counts).
+ISSUE 3 adds the count-stratified planner (``fl.planner``): one padded
+dispatch per power-of-two count bucket, ≤ 2·Σcounts draws under any skew.
 
-Rows: ``synthesize_bench/M{M}_C{C}_{impl}`` with us_per_call and
-``speedup=`` on the batched row.
+Two scenarios:
+
+* uniform grid (the ISSUE 1 sweep) — every slot wants the same count, the
+  plan degenerates to one bucket, and the planner must NOT regress the
+  batched win over the loop;
+* skewed cohort (ISSUE 3) — 10×10 slots with counts log-spaced 1 → 4096.
+  The monolithic pad draws M·C·max = 409 600 samples; the planned path
+  must draw ≤ 2·Σcounts.  Rows report draws, the draw ratio, and the
+  measured speedup.
+
+Rows: ``synthesize_bench/M{M}_C{C}_{impl}`` and
+``synthesize_bench/skew_M{M}_C{C}_{impl}`` with us_per_call and
+``speedup=`` / ``draws=`` in the derived column.
 """
 from __future__ import annotations
 
@@ -20,6 +30,7 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.fl import api as FA
+from repro.fl import planner as P
 
 K = 5
 D = 64
@@ -33,8 +44,15 @@ def _make_batch(key, M, Cn):
         "mu": jax.random.normal(ks[1], (M, Cn, K, D)),
         "cov": 0.1 + jax.random.uniform(ks[2], (M, Cn, K, D)),
     }
-    counts = np.full((M, Cn), SAMPLES_PER_SLOT, np.int64)
-    return jax.tree.map(jax.block_until_ready, batch), counts
+    return jax.tree.map(jax.block_until_ready, batch)
+
+
+def _skewed_counts(M, Cn, lo=1, hi=4096, seed=3):
+    """Per-slot counts log-spaced lo → hi (orders-of-magnitude skew),
+    shuffled so buckets don't align with clients."""
+    counts = np.geomspace(lo, hi, M * Cn).astype(np.int64)
+    np.random.RandomState(seed).shuffle(counts)
+    return counts.reshape(M, Cn)
 
 
 def _time(fn, *args, reps: int) -> float:
@@ -49,12 +67,15 @@ def _time(fn, *args, reps: int) -> float:
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(11)
+
+    # -- uniform grid (ISSUE 1 rows — planner degenerates to one bucket) --
     grid = [(2, 4), (10, 10), (20, 16)]
     if quick:
         grid = [(2, 4), (10, 10)]
     reps = 2 if quick else 3
     for M, Cn in grid:
-        batch, counts = _make_batch(jax.random.fold_in(key, M * Cn), M, Cn)
+        batch = _make_batch(jax.random.fold_in(key, M * Cn), M, Cn)
+        counts = np.full((M, Cn), SAMPLES_PER_SLOT, np.int64)
         us_loop = _time(
             lambda: FA.synthesize_looped(key, batch, counts, "diag"),
             reps=reps)
@@ -65,6 +86,30 @@ def main(quick: bool = False):
                f"dispatches={M * Cn}")
         C.emit(f"synthesize_bench/M{M}_C{Cn}_batched", us_batch,
                f"speedup={us_loop / max(us_batch, 1e-9):.1f}x")
+
+    # -- skewed cohort (ISSUE 3): counts span 1 → 4096 over 10×10 slots --
+    M, Cn = 10, 10
+    batch = _make_batch(jax.random.fold_in(key, 777), M, Cn)
+    counts = _skewed_counts(M, Cn)
+    plan = P.plan_synthesis(counts)
+    mono = P.plan_synthesis(counts, policy="single")
+    assert plan.padded_draws <= 2 * plan.requested, \
+        (plan.padded_draws, plan.requested)
+    us_mono = _time(
+        lambda: FA.synthesize_batched(key, batch, counts, "diag",
+                                      policy="single"),
+        reps=reps)
+    us_plan = _time(
+        lambda: FA.synthesize_batched(key, batch, counts, "diag"),
+        reps=reps)
+    C.emit(f"synthesize_bench/skew_M{M}_C{Cn}_monolithic", us_mono,
+           f"draws={mono.padded_draws}:requested={mono.requested}:"
+           f"waste={mono.padded_draws / mono.requested:.1f}x")
+    C.emit(f"synthesize_bench/skew_M{M}_C{Cn}_planned", us_plan,
+           f"draws={plan.padded_draws}:ratio="
+           f"{plan.padded_draws / plan.requested:.2f}x:"
+           f"buckets={plan.n_dispatches}:"
+           f"speedup={us_mono / max(us_plan, 1e-9):.1f}x")
 
 
 if __name__ == "__main__":

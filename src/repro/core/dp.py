@@ -28,9 +28,25 @@ class DPConfig:
     reg: float = 1e-6        # PSD floor after projection
 
 
-def noise_scale(n: int, eps: float, delta: float) -> float:
-    """Theorem 4.1's per-element Gaussian std."""
+def noise_scale(n, eps: float, delta: float):
+    """Theorem 4.1's per-element Gaussian std.
+
+    ``n`` may be a scalar or a vector of per-class counts — the returned
+    σ broadcasts accordingly (used by the vmapped classwise mechanism).
+    """
     return (4.0 / (n * eps)) * math.sqrt(5.0 * math.log(4.0 / delta))
+
+
+def symmetric_noise(key, d: int, sigma) -> jax.Array:
+    """Symmetric (d, d) Gaussian noise with per-element std exactly σ.
+
+    Draws the upper triangle (diagonal included) at full σ and mirrors it.
+    Averaging a full draw with its transpose — ``0.5·(E + Eᵀ)`` — would
+    leave the off-diagonals at σ/√2, under-noising Σ by a factor √2
+    relative to Theorem 4.1 and silently weakening the (ε, δ) guarantee.
+    """
+    raw = jax.random.normal(key, (d, d), jnp.float32)
+    return sigma * (jnp.triu(raw) + jnp.triu(raw, 1).T)
 
 
 def project_psd(sym: jax.Array, floor: float = 0.0) -> jax.Array:
@@ -41,6 +57,16 @@ def project_psd(sym: jax.Array, floor: float = 0.0) -> jax.Array:
     return (evecs * evals[None, :]) @ evecs.T
 
 
+def _privatize_with_sigma(key, mu: jax.Array, cov: jax.Array, sigma,
+                          reg: float) -> Tuple[jax.Array, jax.Array]:
+    """The mechanism at a given σ — the vmap-able core of Theorem 4.1."""
+    d = mu.shape[-1]
+    k1, k2 = jax.random.split(key)
+    mu_t = mu + sigma * jax.random.normal(k1, (d,), jnp.float32)
+    cov_t = project_psd(cov + symmetric_noise(k2, d, sigma), reg)
+    return mu_t, cov_t
+
+
 def privatize_gaussian(key, mu: jax.Array, cov: jax.Array, n: int,
                        cfg: DPConfig) -> Tuple[jax.Array, jax.Array]:
     """Gaussian mechanism on one class's (mu^, Sigma^). Returns (mu~, Sigma~).
@@ -48,14 +74,8 @@ def privatize_gaussian(key, mu: jax.Array, cov: jax.Array, n: int,
     ``n`` is the class sample count; caller must have normalized features
     to the unit ball (Theorem 4.1's hypothesis).
     """
-    d = mu.shape[-1]
     sigma = noise_scale(max(n, 1), cfg.epsilon, cfg.delta)
-    k1, k2 = jax.random.split(key)
-    mu_t = mu + sigma * jax.random.normal(k1, (d,), jnp.float32)
-    noise = sigma * jax.random.normal(k2, (d, d), jnp.float32)
-    noise = 0.5 * (noise + noise.T)  # symmetric; scale still sigma per elem up
-    cov_t = project_psd(cov + noise, cfg.reg)
-    return mu_t, cov_t
+    return _privatize_with_sigma(key, mu, cov, sigma, cfg.reg)
 
 
 def run_dp_fedpft(key, client_datasets, n_classes: int, fp_cfg,
@@ -64,9 +84,12 @@ def run_dp_fedpft(key, client_datasets, n_classes: int, fp_cfg,
 
     Clients fit K=1 full-covariance per-class Gaussians over unit-norm
     features, privatize them with the Theorem 4.1 mechanism, and the encoded
-    messages flow through the same codec + batched synthesis as non-private
-    FedPFT.  ``min_class_count`` drops classes with too few samples to
-    survive the σ ∝ 1/n noise (they are simply not transmitted).
+    messages flow through the same codec + planned (count-stratified)
+    synthesis as non-private FedPFT.  ``min_class_count`` drops classes
+    with too few samples to survive the σ ∝ 1/n noise (they are simply not
+    transmitted); if it filters *every* class, the session returns the
+    clean empty-cohort result (``info["empty_cohort"]``) instead of
+    crashing head training.
 
     Returns (head_params, info) with ``info["comm_bytes"]`` equal to the
     total encoded payload length.
@@ -86,26 +109,19 @@ def run_dp_fedpft(key, client_datasets, n_classes: int, fp_cfg,
 def privatize_classwise(key, gmms: Dict, counts, cfg: DPConfig) -> Dict:
     """Apply the mechanism to stacked per-class K=1 full-cov GMMs.
 
-    gmms: pi (C,1), mu (C,1,d), cov (C,1,d,d). Empty classes pass through
-    (they are never transmitted).
+    gmms: pi (C,1), mu (C,1,d), cov (C,1,d,d). One vmapped mechanism call
+    covers all C classes, each at its own σ ∝ 1/n_c (empty classes are
+    noised at n=1 but never transmitted — counts stay 0).
     """
-    C = gmms["mu"].shape[0]
+    mu = jnp.asarray(gmms["mu"])
+    cov = jnp.asarray(gmms["cov"])
+    C = mu.shape[0]
     keys = jax.random.split(key, C)
-
-    def one(k, mu, cov, n):
-        return privatize_gaussian(k, mu[0], cov[0],
-                                  jnp.maximum(n, 1).astype(jnp.int32), cfg)
-
-    # noise scale depends on per-class n — do it per class (host loop is C)
-    mus, covs = [], []
-    counts = jnp.asarray(counts)
-    for c in range(C):
-        n = int(counts[c])
-        mu_t, cov_t = privatize_gaussian(
-            keys[c], jnp.asarray(gmms["mu"])[c, 0],
-            jnp.asarray(gmms["cov"])[c, 0], max(n, 1), cfg)
-        mus.append(mu_t)
-        covs.append(cov_t)
+    n = jnp.maximum(jnp.asarray(counts).reshape(C), 1).astype(jnp.float32)
+    sigmas = noise_scale(n, cfg.epsilon, cfg.delta)            # (C,)
+    mu_t, cov_t = jax.vmap(
+        lambda k, m, c, s: _privatize_with_sigma(k, m, c, s, cfg.reg)
+    )(keys, mu[:, 0], cov[:, 0], sigmas)
     return {"pi": jnp.asarray(gmms["pi"]),
-            "mu": jnp.stack(mus)[:, None],
-            "cov": jnp.stack(covs)[:, None]}
+            "mu": mu_t[:, None],
+            "cov": cov_t[:, None]}

@@ -111,9 +111,11 @@ def synthesize(key, messages: Sequence[ClientMessage], cov_type: str,
                ) -> Tuple[jax.Array, jax.Array]:
     """Algorithm 1, lines 13-16: draw |F^{i,c}| samples from every g^{i,c}.
 
-    Messages with matching (K, d) stack into ONE batched jitted sample call
-    (``fl.api.synthesize_groups``); sampling keys are folded per
-    (client, class) slot, so no two mixtures share a key.
+    Messages with matching (K, d) stack into one group and run through the
+    count-stratified synthesis planner (``fl.api.synthesize_groups`` →
+    ``fl.planner``): one jitted sample per power-of-two count bucket, ≤
+    2·Σcounts draws under any skew; sampling keys are folded per global
+    (client, class) slot, so no two mixtures ever share a key.
     """
     from repro.fl import api as FA
     return FA.synthesize_groups(

@@ -26,6 +26,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
@@ -198,6 +199,32 @@ def fit_gmm_batch(keys, x: jax.Array, weights: jax.Array,
 
     Returns (gmms stacked (B, …), mean logliks (B,)).
     """
+    if weights.ndim != 2:
+        raise ValueError(
+            f"fit_gmm_batch: weights must be (B, N), got shape "
+            f"{weights.shape} — add a leading axis (weights[None]) for a "
+            "single fit, or use fit_gmm")
+    B = weights.shape[0]
+    if x.ndim != 3:
+        raise ValueError(
+            f"fit_gmm_batch: x must be (Bx, N, d), got shape {x.shape} — "
+            "add a leading axis (x[None]) for a single shared block")
+    Bx, N = x.shape[0], x.shape[1]
+    if Bx == 0 or B % Bx != 0:
+        raise ValueError(
+            f"fit_gmm_batch: B={B} fits do not evenly share Bx={Bx} "
+            f"feature blocks (weights {weights.shape} vs x {x.shape}); "
+            "each block is shared by B // Bx CONSECUTIVE fits — e.g. one "
+            "client's features fit per-class has Bx=clients, "
+            "B=clients*classes. Reorder or repeat x so B % Bx == 0")
+    if weights.shape[1] != N:
+        raise ValueError(
+            f"fit_gmm_batch: weights rows ({weights.shape[1]}) must match "
+            f"x's sample axis N={N} (weights {weights.shape}, x {x.shape})")
+    if keys.shape[0] != B:
+        raise ValueError(
+            f"fit_gmm_batch: need one PRNG key per fit — got {keys.shape[0]} "
+            f"keys for B={B} weight rows")
     # the dispatch state is a static jit arg: a use_pallas() flip after a
     # same-shape fit must retrace, not silently reuse the old backend
     return _fit_gmm_batch(keys, x, weights, cfg, ops.backend())
@@ -333,15 +360,46 @@ def raw_feature_bytes(n_samples: int, d: int,
     return n_samples * (d + 1) * bytes_per_scalar  # +1 for the label
 
 
+def tril_pack(cov):
+    """Row-major lower-triangle packing: (…, d, d) → (…, d·(d+1)/2).
+
+    THE wire layout for full covariances — ``pack_wire``/``unpack_wire``
+    here and the federation codec's ``fl.api._pack_cov``/``_unpack_cov``
+    all delegate to this pair, so the layout cannot drift between them.
+    Pure indexing: works on numpy and jax arrays alike (host codec path
+    vs in-jit mesh path).
+    """
+    d = cov.shape[-1]
+    i, j = np.tril_indices(d)
+    return cov[..., i, j]
+
+
+def tril_unpack(packed, d: int):
+    """Inverse of :func:`tril_pack`: rebuild the symmetric (…, d, d) f32
+    matrix from its row-major lower triangle.  One layout, two backends:
+    numpy in → numpy out (the host codec decode path stays off-device),
+    jax in → jax out (traceable inside the mesh collectives)."""
+    i, j = np.tril_indices(d)
+    if isinstance(packed, np.ndarray):
+        cov = np.zeros(packed.shape[:-1] + (d, d), np.float32)
+        cov[..., i, j] = packed
+        sym = cov + np.swapaxes(cov, -1, -2)
+        diag_idx = np.arange(d)
+        sym[..., diag_idx, diag_idx] = cov[..., diag_idx, diag_idx]
+        return sym
+    cov = jnp.zeros(packed.shape[:-1] + (d, d), jnp.float32)
+    cov = cov.at[..., i, j].set(packed.astype(jnp.float32))
+    diag = jnp.einsum("...ii->...i", cov)
+    return cov + jnp.swapaxes(cov, -1, -2) - _diag_embed(diag)
+
+
 def pack_wire(gmm: Dict, cov_type: str) -> Dict:
     """bf16 wire-format pytree (what actually crosses the mesh)."""
     packed = {"pi": gmm["pi"].astype(jnp.bfloat16),
               "mu": gmm["mu"].astype(jnp.bfloat16)}
     if cov_type == "full":
         # only the lower triangle is information-bearing
-        d = gmm["cov"].shape[-1]
-        tri = jnp.tril_indices(d)
-        packed["cov"] = gmm["cov"][..., tri[0], tri[1]].astype(jnp.bfloat16)
+        packed["cov"] = tril_pack(gmm["cov"]).astype(jnp.bfloat16)
     else:
         packed["cov"] = gmm["cov"].astype(jnp.bfloat16)
     return packed
@@ -351,13 +409,7 @@ def unpack_wire(packed: Dict, cov_type: str, d: int) -> Dict:
     out = {"pi": packed["pi"].astype(jnp.float32),
            "mu": packed["mu"].astype(jnp.float32)}
     if cov_type == "full":
-        tri = jnp.tril_indices(d)
-        K = packed["pi"].shape[-1]
-        cov = jnp.zeros(packed["mu"].shape[:-1] + (d, d), jnp.float32)
-        cov = cov.at[..., tri[0], tri[1]].set(
-            packed["cov"].astype(jnp.float32))
-        diag = jnp.einsum("...ii->...i", cov)
-        out["cov"] = cov + jnp.swapaxes(cov, -1, -2) - _diag_embed(diag)
+        out["cov"] = tril_unpack(packed["cov"], d)
     else:
         out["cov"] = packed["cov"].astype(jnp.float32)
     return out

@@ -3,15 +3,19 @@
 The paper trains h with Adam + cross-entropy on either real features
 (Centralized oracle) or GMM-sampled synthetic features (FedPFT). One jitted
 ``lax.scan`` runs the whole optimization — no python step loop.
+:func:`train_head_streaming` is the chunked variant for the planner's
+bucketed synthesis (fl/planner): it consumes a list of (feats, labels)
+chunks without ever concatenating them.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 
@@ -46,9 +50,15 @@ def train_head(key, feats: jax.Array, labels: jax.Array, n_classes: int,
                weights: Optional[jax.Array] = None) -> Tuple[Dict, jax.Array]:
     """Train a linear head on (feats, labels). weights=0 masks rows.
 
-    Returns (head params, per-step loss trace).
+    Returns (head params, per-step loss trace).  An empty (N=0) pool — an
+    all-filtered cohort upstream — returns the freshly-initialized head
+    and an empty loss trace instead of crashing ``random.choice`` on 0
+    items.
     """
     N, d = feats.shape
+    if N == 0:
+        return (init_head(jax.random.split(key)[0], d, n_classes),
+                jnp.zeros((0,), jnp.float32))
     if weights is None:
         weights = jnp.ones((N,), jnp.float32)
     feats = feats.astype(jnp.float32)
@@ -71,6 +81,64 @@ def train_head(key, feats: jax.Array, labels: jax.Array, n_classes: int,
     keys = jax.random.split(k_steps, cfg.n_steps)
     (params, _), losses = jax.lax.scan(step, (params, opt_state), keys)
     return params, losses
+
+
+@partial(jax.jit, static_argnames=("cfg", "bs"))
+def _streaming_step(key, params, opt_state, feats, labels, cfg: HeadConfig,
+                    bs: int):
+    """One Adam step on a uniform minibatch drawn from ONE chunk."""
+    idx = jax.random.choice(key, feats.shape[0], (bs,), replace=True)
+    loss, grads = jax.value_and_grad(_xent)(
+        params, feats[idx], labels[idx], jnp.ones((bs,), jnp.float32))
+    opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    return optim.apply_updates(params, updates), opt_state, loss
+
+
+def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
+                         n_classes: int,
+                         cfg: HeadConfig) -> Tuple[Dict, jax.Array]:
+    """Train a linear head over (feats, labels) chunks WITHOUT pooling them.
+
+    Each step picks a chunk with probability ∝ its row count and draws its
+    minibatch uniformly within it — so the per-step minibatch distribution
+    is exactly :func:`train_head`'s uniform sampling over the concatenated
+    pool, but the chunks are never concatenated: the planner's bucketed
+    synthesis (fl/planner) can hand over its per-bucket outputs and peak
+    memory stays O(largest chunk) on top of the resident chunk list.
+    One jitted step per distinct chunk shape; optimizer state carries
+    across chunks.
+
+    Returns (head params, per-step loss trace), matching ``train_head``'s
+    contract — including the N=0 guard: a chunk list with zero total rows
+    returns the freshly-initialized head and an empty loss trace.
+    """
+    if not chunks:
+        raise ValueError("train_head_streaming needs at least one chunk "
+                         "(the feature dim is unknowable from [])")
+    d = int(chunks[0][0].shape[1])
+    chunks = [(jnp.asarray(f, jnp.float32), jnp.asarray(y))
+              for f, y in chunks if int(f.shape[0]) > 0]
+    k_init, k_assign, k_steps = jax.random.split(key, 3)
+    if not chunks:
+        return (init_head(k_init, d, n_classes),
+                jnp.zeros((0,), jnp.float32))
+    sizes = np.asarray([int(f.shape[0]) for f, _ in chunks], np.float64)
+    params = init_head(k_init, d, n_classes)
+    opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
+    opt_state = opt.init(params)
+    assign = np.asarray(jax.device_get(jax.random.choice(
+        k_assign, len(chunks), (cfg.n_steps,),
+        p=jnp.asarray(sizes / sizes.sum()))))
+    keys = jax.random.split(k_steps, cfg.n_steps)
+    losses = []
+    for t in range(cfg.n_steps):
+        f, y = chunks[int(assign[t])]
+        bs = min(cfg.batch_size, int(f.shape[0]))
+        params, opt_state, loss = _streaming_step(keys[t], params, opt_state,
+                                                  f, y, cfg, bs)
+        losses.append(loss)
+    return params, jnp.stack(losses)
 
 
 def accuracy(params: Dict, feats: jax.Array, labels: jax.Array,

@@ -14,9 +14,15 @@ orthogonal pieces composed by a :class:`FedSession`:
     privacy      an optional DP hook applied to the summary *before* encoding
                  (Theorem 4.1's Gaussian mechanism)
 
-Server-side synthesis is one jitted sample over the stacked ``(M, C, K, …)``
-GMM tensor — no per-client or per-class Python dispatch — with sampling keys
-folded deterministically per (client, class) slot.
+Server-side synthesis is planned: the count-stratified planner
+(:mod:`repro.fl.planner`) groups the flat ``(M·C)`` mixture slots into
+power-of-two count buckets and issues one jitted sample per bucket at that
+bucket's padded size — ≤ 2·Σcounts total draws under any skew — with
+sampling keys folded deterministically per *global* (client, class) slot:
+no two slots ever share a key, whatever the bucketing.  (The realized
+values still depend on the bucket's padded S — policies are equal in
+distribution, not bitwise.)  Bucket chunks can stream
+straight into ``core.head.train_head_streaming`` without pooling.
 """
 from __future__ import annotations
 
@@ -32,12 +38,13 @@ import numpy as np
 from repro.core import dp as DP
 from repro.core import gmm as G
 from repro.core import head as H
+from repro.fl import planner as P
 
 __all__ = [
     "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
     "HeadSummarizer", "Star", "Chain", "Ring", "FedSession", "SessionResult",
     "encode_message", "stack_messages", "synthesize_batched",
-    "synthesize_looped",
+    "synthesize_chunks", "synthesize_group_chunks", "synthesize_looped",
 ]
 
 # ---------------------------------------------------------------------------
@@ -129,27 +136,19 @@ def _packed_cov_shape(cov_type: str, Cp: int, K: int, d: int):
 def _pack_cov(cov: np.ndarray, cov_type: str) -> np.ndarray:
     """(…, d, d) full covariances → lower-triangle scalars; others pass.
 
-    Host-side twin of ``gmm.pack_wire``/``unpack_wire`` — both use the
-    row-major ``tril_indices`` layout, and ``comm_bytes`` (Eqs. 9-11)
-    counts exactly these scalars; change all three together or not at all.
+    Delegates to ``gmm.tril_pack`` — the ONE row-major tril wire layout
+    shared with ``gmm.pack_wire``/``unpack_wire``; ``comm_bytes``
+    (Eqs. 9-11) counts exactly these scalars.
     """
     if cov_type != "full":
         return cov
-    d = cov.shape[-1]
-    i, j = np.tril_indices(d)
-    return cov[..., i, j]
+    return np.asarray(G.tril_pack(cov))
 
 
 def _unpack_cov(packed: np.ndarray, cov_type: str, d: int) -> np.ndarray:
     if cov_type != "full":
         return packed
-    i, j = np.tril_indices(d)
-    cov = np.zeros(packed.shape[:-1] + (d, d), np.float32)
-    cov[..., i, j] = packed
-    sym = cov + np.swapaxes(cov, -1, -2)
-    diag_idx = np.arange(d)
-    sym[..., diag_idx, diag_idx] = cov[..., diag_idx, diag_idx]
-    return sym
+    return G.tril_unpack(np.asarray(packed, np.float32), d)
 
 
 # ---------------------------------------------------------------------------
@@ -257,21 +256,22 @@ def stack_messages(messages: Sequence[ClientMessage]) -> Dict[str, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# batched server-side synthesis — ONE jitted sample per round
+# planned server-side synthesis — one jitted sample per count bucket
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("S", "cov_type"))
-def _sample_stacked(key, pi, mu, cov, S: int, cov_type: str) -> jax.Array:
+def _sample_stacked(key, slot_ids, pi, mu, cov, S: int,
+                    cov_type: str) -> jax.Array:
     """Draw S samples from every mixture in a flat (G, K, …) stack → (G, S, d).
 
-    Keys are folded per mixture slot — distinct, deterministic draws for
-    every (client, class) pair (the v1 loop re-split from one key and
-    correlated clients; see ISSUE 1).
+    Keys are folded per *global* mixture slot id — distinct, deterministic
+    draws for every (client, class) pair (the v1 loop re-split from one key
+    and correlated clients; see ISSUE 1).  ``slot_ids`` carries the ids so
+    a bucket of the planner folds the same keys as a monolithic dispatch.
     """
-    Gn, K = pi.shape
     d = mu.shape[-1]
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(Gn))
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slot_ids)
 
     def one(k, p, m, c):
         kc, kn = jax.random.split(k)
@@ -294,72 +294,129 @@ def _sample_stacked(key, pi, mu, cov, S: int, cov_type: str) -> jax.Array:
     return jax.vmap(one)(keys, pi, mu, cov)
 
 
-def synthesize_groups(key, items, samples_per_class: Optional[int] = None
-                      ) -> Tuple[jax.Array, jax.Array]:
-    """Pool synthesis over a possibly-heterogeneous cohort.
+def synthesize_group_chunks(key, items,
+                            samples_per_class: Optional[int] = None,
+                            policy: str = "pow2"
+                            ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
+                                       List[P.SynthesisPlan]]:
+    """Planned synthesis over a possibly-heterogeneous cohort → chunk list.
 
     ``items``: sequence of ``(params, counts, cov_type)`` per client.
-    Clients with matching (cov_type, param shapes) stack into ONE batched
-    jitted sample call — one group (the homogeneous common case) is one
-    call per round; a mixed-K/cov cohort (paper §6.3) gets one per family.
+    Clients with matching (cov_type, param shapes) stack into one group —
+    one :func:`plan_synthesis` plan per group, one jitted sample per count
+    bucket; a mixed-K/cov cohort (paper §6.3) gets one plan per family.
     The fold_in per group keeps draws deterministic in sorted-group order.
+
+    Returns ``(chunks, plans)`` where every chunk is a compacted
+    ``(feats, labels)`` pair — stream them into
+    ``core.head.train_head_streaming`` or concatenate for the pooled view.
     """
     groups: Dict[Tuple, List] = {}
     for params, counts, cov_type in items:
         sig = (cov_type,) + tuple(np.shape(params[f]) for f in _GMM_FIELDS)
         groups.setdefault(sig, []).append((params, counts))
-    fs, ys = [], []
+    chunks, plans = [], []
     for gi, (sig, members) in enumerate(sorted(groups.items())):
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[p for p, _ in members])
         counts = np.stack([np.asarray(jax.device_get(c)) for _, c in
                            members])
-        f, y = synthesize_batched(jax.random.fold_in(key, gi), batch,
-                                  counts, sig[0], samples_per_class)
-        fs.append(f)
-        ys.append(y)
-    return jnp.concatenate(fs), jnp.concatenate(ys)
+        ch, plan = synthesize_chunks(jax.random.fold_in(key, gi), batch,
+                                     counts, sig[0], samples_per_class,
+                                     policy=policy)
+        chunks.extend(ch)
+        plans.append(plan)
+    return chunks, plans
 
 
-def synthesize_batched(key, batch: Dict[str, jax.Array], counts,
-                       cov_type: str,
-                       samples_per_class: Optional[int] = None
-                       ) -> Tuple[jax.Array, jax.Array]:
-    """Algorithm 1, lines 13-16 over the whole cohort in one kernel call.
+def synthesize_groups(key, items, samples_per_class: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Pooled synthesis over a possibly-heterogeneous cohort.
+
+    The concatenating view of :func:`synthesize_group_chunks` — same plans,
+    same draws, one (N, d) feature pool.
+    """
+    chunks, _ = synthesize_group_chunks(key, items, samples_per_class)
+    return (jnp.concatenate([f for f, _ in chunks]),
+            jnp.concatenate([y for _, y in chunks]))
+
+
+def synthesize_chunks(key, batch: Dict[str, jax.Array], counts,
+                      cov_type: str,
+                      samples_per_class: Optional[int] = None,
+                      policy: str = "pow2",
+                      plan: Optional[P.SynthesisPlan] = None
+                      ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
+                                 P.SynthesisPlan]:
+    """Algorithm 1, lines 13-16, executed bucket-by-bucket.
 
     ``batch``: pi (M,C,K), mu (M,C,K,d), cov (M,C,K,…) — or the unstacked
     single-client (C,K,…) layout.  ``counts``: (M,C) sample counts; class
-    slots with 0 are never emitted.  Returns the pooled (N, d) synthetic
-    features and (N,) labels, N = Σ counts (or M·C_present·samples_per_class).
+    slots with 0 are never emitted.  The count-stratified plan
+    (:mod:`repro.fl.planner`) groups slots into power-of-two buckets; each
+    bucket is ONE ``_sample_stacked`` call at the bucket's padded S,
+    compacted host-side — so peak memory is O(largest bucket's padded
+    block) and total draws are ≤ 2·Σcounts under any skew, vs the old
+    monolithic dispatch's M·C·max(counts) (``policy="single"``, kept for
+    benchmarks/synthesize_bench.py).
 
-    Cost note: every slot pads to S = max(counts), so a heavily skewed
-    cohort draws up to M·C·S where Σ counts would do.  At this repo's
-    scales (counts ≤ a few hundred) the padded draw is still ≫ faster than
-    per-slot dispatch (benchmarks/synthesize_bench.py); if skew grows,
-    ``samples_per_class`` caps S, and bucketing slots by count magnitude
-    is the next lever (DESIGN.md §2).
+    Per-slot sampling keys fold on *global* slot ids, so no two slots
+    ever share a key and a slot's key does not depend on its bucket
+    assignment.  (The realized draws DO depend on the bucket's padded S —
+    ``"pow2"`` and ``"single"`` agree in distribution and in per-slot
+    counts/labels, not bitwise.)  Returns
+    ``(chunks, plan)``; chunks is a list of compacted ``(feats (n, d),
+    labels (n,))`` pairs in ascending-bucket order, and is never empty —
+    an all-zero cohort yields one ``(0, d)`` chunk.
     """
     counts = np.asarray(jax.device_get(counts), np.int64)
     if counts.ndim == 1:
         counts = counts[None]
-        batch = jax.tree.map(lambda a: a[None], batch)
+        batch = jax.tree.map(lambda a: jnp.asarray(a)[None], batch)
     M, C = counts.shape
-    n_eff = counts if samples_per_class is None else \
-        np.where(counts > 0, samples_per_class, 0).astype(np.int64)
-    S = int(n_eff.max(initial=0))
+    if plan is None:
+        plan = P.plan_synthesis(counts, samples_per_class, policy=policy)
+    elif (plan.M, plan.C) != (M, C):
+        # a stale plan would gather wrong slots silently (jax clamps
+        # out-of-range indices) — refuse instead
+        raise ValueError(f"plan was built for a ({plan.M}, {plan.C}) "
+                         f"cohort, counts are ({M}, {C})")
     d = batch["mu"].shape[-1]
-    if S == 0:
-        return (jnp.zeros((0, d), jnp.float32), jnp.zeros((0,), jnp.int32))
+    if not plan.buckets:
+        return [(jnp.zeros((0, d), jnp.float32),
+                 jnp.zeros((0,), jnp.int32))], plan
 
-    flat = jax.tree.map(lambda a: a.reshape((M * C,) + a.shape[2:]), batch)
-    samples = _sample_stacked(key, flat["pi"], flat["mu"], flat["cov"], S,
-                              cov_type)                        # (M*C, S, d)
-    # compact away the padding rows host-side: one gather, no per-class loop
-    keep = np.arange(S)[None, :] < n_eff.reshape(-1, 1)        # (M*C, S)
-    idx = np.flatnonzero(keep)
-    labels = np.repeat(np.tile(np.arange(C, dtype=np.int32), M), S)[idx]
-    feats = samples.reshape(M * C * S, d)[jnp.asarray(idx)]
-    return feats, jnp.asarray(labels)
+    flat = jax.tree.map(
+        lambda a: jnp.asarray(a).reshape((M * C,) + a.shape[2:]), batch)
+    chunks = []
+    for b in plan.buckets:
+        slots = jnp.asarray(b.slots)
+        samples = _sample_stacked(key, slots, flat["pi"][slots],
+                                  flat["mu"][slots], flat["cov"][slots],
+                                  b.S, cov_type)               # (G_b, S, d)
+        # compact away the padding rows host-side: one gather per bucket
+        keep = np.arange(b.S)[None, :] < b.n_eff[:, None]      # (G_b, S)
+        idx = np.flatnonzero(keep)
+        labels = np.repeat((b.slots % C).astype(np.int32), b.S)[idx]
+        feats = samples.reshape(len(b.slots) * b.S, d)[jnp.asarray(idx)]
+        chunks.append((feats, jnp.asarray(labels)))
+    return chunks, plan
+
+
+def synthesize_batched(key, batch: Dict[str, jax.Array], counts,
+                       cov_type: str,
+                       samples_per_class: Optional[int] = None,
+                       policy: str = "pow2"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Pooled view of :func:`synthesize_chunks` — same plan, same draws.
+
+    Returns the pooled (N, d) synthetic features and (N,) labels,
+    N = Σ counts (or M·C_present·samples_per_class).
+    """
+    chunks, _ = synthesize_chunks(key, batch, counts, cov_type,
+                                  samples_per_class, policy=policy)
+    return (jnp.concatenate([f for f, _ in chunks]),
+            jnp.concatenate([y for _, y in chunks]))
 
 
 def synthesize_looped(key, batch: Dict, counts, cov_type: str,
@@ -536,6 +593,9 @@ class FedSession:
     aggregate: str = "synthesize"  # "synthesize" | "avg" | "ensemble" | "fedbe"
     client_summarizers: Optional[Tuple[Any, ...]] = None  # heterogeneous K/cov
     min_class_count: int = 0       # don't transmit classes below this count
+    stream_synthesis: bool = False  # train the head on per-bucket chunks
+    #   without pooling: server peak memory stays O(largest bucket) instead
+    #   of O(Σcounts · d) + the padded block (DESIGN.md §2)
 
     # -- plumbing -----------------------------------------------------------
 
@@ -610,23 +670,47 @@ class FedSession:
     # -- server side --------------------------------------------------------
 
     def _synthesize_all(self, key, messages: Sequence[ClientMessage]
-                        ) -> Tuple[jax.Array, jax.Array]:
-        return synthesize_groups(
+                        ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
+                                   List[P.SynthesisPlan]]:
+        return synthesize_group_chunks(
             key, [(m.params, m.counts, m.header.cov_type)
                   for m in messages], self.samples_per_class)
 
     def server_aggregate(self, key, messages: Sequence[ClientMessage]
                          ) -> SessionResult:
+        if not messages:
+            raise ValueError("server_aggregate needs at least one message")
         comm = sum(m.comm_bytes for m in messages)
         info: Dict = {"comm_bytes": comm}
         kind = messages[0].header.kind
         if kind == "gmm":
             k_syn, k_head = jax.random.split(key)
-            feats, labels = self._synthesize_all(k_syn, messages)
-            head_params, losses = H.train_head(k_head, feats, labels,
-                                               self.n_classes, self.head)
-            info.update(synthetic_feats=feats, synthetic_labels=labels,
-                        head_losses=losses)
+            chunks, plans = self._synthesize_all(k_syn, messages)
+            info["synthesis_plans"] = plans
+            n_syn = sum(int(f.shape[0]) for f, _ in chunks)
+            if n_syn == 0:
+                # min_class_count (or an all-empty cohort) filtered every
+                # class: return a cleanly-initialized head instead of
+                # crashing train_head on a 0-row pool
+                d = messages[0].header.d
+                info.update(synthetic_feats=jnp.zeros((0, d), jnp.float32),
+                            synthetic_labels=jnp.zeros((0,), jnp.int32),
+                            head_losses=jnp.zeros((0,), jnp.float32),
+                            empty_cohort=True)
+                return SessionResult(model=H.init_head(k_head, d,
+                                                       self.n_classes),
+                                     info=info, messages=list(messages))
+            if self.stream_synthesis:
+                head_params, losses = H.train_head_streaming(
+                    k_head, chunks, self.n_classes, self.head)
+                info.update(synthetic_chunks=chunks, head_losses=losses)
+            else:
+                feats = jnp.concatenate([f for f, _ in chunks])
+                labels = jnp.concatenate([y for _, y in chunks])
+                head_params, losses = H.train_head(k_head, feats, labels,
+                                                   self.n_classes, self.head)
+                info.update(synthetic_feats=feats, synthetic_labels=labels,
+                            head_losses=losses)
             return SessionResult(model=head_params, info=info,
                                  messages=list(messages))
         # head-level aggregation (one-shot baselines) — estimators match

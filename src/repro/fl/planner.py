@@ -1,0 +1,129 @@
+"""Count-stratified synthesis planner (DESIGN.md §2).
+
+The server's synthesis step (Algorithm 1, lines 13-16) draws ``n[m, c]``
+samples from every (client, class) mixture slot.  A single padded dispatch
+pads *every* slot to ``S = max(n)`` — under heavy count skew (covariate /
+task shift, §6) that wastes up to ``M·C·max(n) / Σn`` of the FLOPs and peak
+memory.  The planner instead groups the flat ``M·C`` slots into
+power-of-two count buckets and pads each bucket only to its own ceiling:
+
+    bucket S ∈ {1, 2, 4, …}:  every slot with  S/2 < n[slot] ≤ S
+
+Each slot therefore draws at most ``2·n − 1`` samples, so the whole plan
+draws **≤ 2·Σn** regardless of skew, with at most ``⌈log2(max n)⌉ + 1``
+batched dispatches.  Zero-count slots are never planned.  A ``"single"``
+policy reproduces the old monolithic padded dispatch (one bucket at the
+global max) — kept for the A/B in ``benchmarks/synthesize_bench.py``.
+
+The planner is pure host-side bookkeeping over the counts matrix; execution
+(one ``_sample_stacked`` call per bucket, streamed into head training)
+lives in :mod:`repro.fl.api`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Bucket", "SynthesisPlan", "plan_synthesis"]
+
+POLICIES = ("pow2", "single")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Bucket:
+    """One padded dispatch: ``len(slots)`` mixtures sampled at ``S`` each.
+
+    ``eq=False``: the ndarray fields make the generated ``__eq__``/
+    ``__hash__`` lies — identity comparison is the honest contract.
+    """
+    S: int                 # padded draw count for every slot in this bucket
+    slots: np.ndarray      # (G_b,) flat slot ids into the (M·C) stack
+    n_eff: np.ndarray      # (G_b,) requested samples per slot, 1 ≤ n ≤ S
+
+    @property
+    def padded_draws(self) -> int:
+        return int(len(self.slots)) * self.S
+
+    @property
+    def requested(self) -> int:
+        return int(self.n_eff.sum())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SynthesisPlan:
+    """Bucketed schedule for one cohort's synthesis round.
+
+    Buckets are ordered by ascending ``S`` and slots ascend within each
+    bucket, so execution order — and the per-slot ``fold_in`` keys, which
+    use *global* slot ids — is deterministic and independent of policy.
+    (Keys, not realized values: a slot's draws depend on its bucket's
+    padded S, so policies agree in distribution and per-slot counts,
+    not bitwise.)
+    """
+    M: int
+    C: int
+    buckets: Tuple[Bucket, ...]
+
+    @property
+    def requested(self) -> int:
+        """Σ n_eff — what Algorithm 1 actually asks for."""
+        return sum(b.requested for b in self.buckets)
+
+    @property
+    def padded_draws(self) -> int:
+        """What this plan will draw, padding included."""
+        return sum(b.padded_draws for b in self.buckets)
+
+    @property
+    def monolithic_draws(self) -> int:
+        """What the single-bucket (pre-planner) dispatch would draw:
+        every slot padded to the global max count."""
+        if not self.buckets:
+            return 0
+        return self.M * self.C * max(int(b.n_eff.max())
+                                     for b in self.buckets)
+
+    @property
+    def n_dispatches(self) -> int:
+        return len(self.buckets)
+
+
+def _bucket_ceiling(n: np.ndarray) -> np.ndarray:
+    """Next power of two ≥ n (n ≥ 1): the bucket's padded S."""
+    return (2 ** np.ceil(np.log2(n)).astype(np.int64)).astype(np.int64)
+
+
+def plan_synthesis(counts, samples_per_class: Optional[int] = None,
+                   policy: str = "pow2") -> SynthesisPlan:
+    """Build the bucketed schedule for a ``(M, C)`` counts matrix.
+
+    ``samples_per_class`` overrides every present slot's count (absent
+    slots stay 0), matching ``synthesize_batched``'s semantics.  The
+    ``"pow2"`` policy guarantees ``padded_draws ≤ 2 · requested``;
+    ``"single"`` is the old monolithic padded dispatch.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"plan_synthesis: unknown policy {policy!r} — "
+                         f"choose one of {POLICIES}")
+    counts = np.asarray(counts, np.int64)
+    if counts.ndim == 1:
+        counts = counts[None]
+    M, C = counts.shape
+    n_eff = counts if samples_per_class is None else \
+        np.where(counts > 0, samples_per_class, 0).astype(np.int64)
+    flat = n_eff.reshape(-1)
+    nz = np.flatnonzero(flat > 0)
+    if nz.size == 0:
+        return SynthesisPlan(M=M, C=C, buckets=())
+    if policy == "single":
+        S = int(flat[nz].max())
+        return SynthesisPlan(M=M, C=C, buckets=(
+            Bucket(S=S, slots=nz, n_eff=flat[nz]),))
+    ceil = _bucket_ceiling(flat[nz])
+    buckets = []
+    for S in np.unique(ceil):
+        sel = nz[ceil == S]
+        buckets.append(Bucket(S=int(S), slots=sel, n_eff=flat[sel]))
+    return SynthesisPlan(M=M, C=C, buckets=tuple(buckets))

@@ -74,6 +74,60 @@ class TestDP:
         np.testing.assert_allclose(np.asarray(DP.project_psd(psd)),
                                    np.asarray(psd), rtol=1e-4, atol=1e-4)
 
+    def test_symmetric_noise_std_matches_sigma(self, key):
+        """Empirical variance regression for the Theorem 4.1 mechanism:
+        EVERY element of the Σ noise — diagonal AND off-diagonal — must
+        have std within 5% of σ.  (The old ``0.5·(E + Eᵀ)`` symmetrization
+        left off-diagonals at σ/√2 ≈ 0.707σ, silently under-noising.)"""
+        d, R, sigma = 8, 4000, 1.3
+        draws = jax.vmap(lambda k: DP.symmetric_noise(k, d, sigma))(
+            jax.random.split(key, R))                          # (R, d, d)
+        draws = np.asarray(draws)
+        np.testing.assert_array_equal(draws, np.swapaxes(draws, -1, -2))
+        std = draws.std(axis=0)                                # (d, d)
+        off = std[~np.eye(d, dtype=bool)]
+        diag = std[np.eye(d, dtype=bool)]
+        assert abs(off.mean() - sigma) < 0.05 * sigma, off.mean()
+        assert abs(diag.mean() - sigma) < 0.05 * sigma, diag.mean()
+        # per-entry too: no element anywhere near the σ/√2 regression
+        assert (off > 0.9 * sigma).all(), off.min()
+
+    def test_mechanism_offdiag_noise_through_privatize(self, key):
+        """End-to-end through privatize_gaussian: with Σ = c·I large enough
+        that the PSD projection is the identity, the added noise std is σ
+        on- AND off-diagonal."""
+        d, R, n = 6, 3000, 500
+        cfg = DP.DPConfig(epsilon=1.0, delta=1e-3)
+        sigma = DP.noise_scale(n, cfg.epsilon, cfg.delta)
+        mu = jnp.zeros((d,))
+        cov = 10.0 * jnp.eye(d)                 # eigs ≫ noise: proj = id
+        _, cov_t = jax.vmap(
+            lambda k: DP.privatize_gaussian(k, mu, cov, n, cfg)
+        )(jax.random.split(key, R))
+        noise = np.asarray(cov_t) - np.asarray(cov)[None]
+        std = noise.std(axis=0)
+        off = std[~np.eye(d, dtype=bool)]
+        assert abs(off.mean() - sigma) < 0.05 * sigma, (off.mean(), sigma)
+        assert abs(std[np.eye(d, dtype=bool)].mean() - sigma) \
+            < 0.05 * sigma
+
+    def test_privatize_classwise_vmapped_per_class_sigma(self, key):
+        """The vmapped classwise mechanism applies each class's OWN
+        σ ∝ 1/n_c: a huge-count class barely moves, a tiny-count class
+        gets visibly noised — in one call, no host loop."""
+        d, C = DIM, 4
+        gmms = {"pi": jnp.ones((C, 1)),
+                "mu": jnp.zeros((C, 1, d)),
+                "cov": jnp.tile(0.5 * jnp.eye(d)[None, None], (C, 1, 1, 1))}
+        counts = np.array([10 ** 6, 5, 10 ** 6, 0])
+        priv = DP.privatize_classwise(key, gmms, counts,
+                                      DP.DPConfig(epsilon=1.0, delta=1e-3))
+        err = np.abs(np.asarray(priv["mu"])[:, 0]).max(axis=-1)   # (C,)
+        assert err[0] < 1e-3 and err[2] < 1e-3                    # n = 1e6
+        assert err[1] > 0.1                                       # n = 5
+        for leaf in jax.tree.leaves(priv):
+            assert np.isfinite(np.asarray(leaf)).all()
+
     def test_privatize_preserves_utility_large_n(self, key):
         """With many samples the mechanism's noise vanishes (σ ∝ 1/n)."""
         mu = jnp.ones((DIM,)) * 0.1

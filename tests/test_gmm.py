@@ -166,6 +166,95 @@ class TestClasswise:
         assert int(counts.sum()) == x.shape[0] - 100
 
 
+class TestBatchContract:
+    """fit_gmm_batch's shared-feature-block contract is enforced with
+    actionable errors, not a reshape crash deep inside the jit."""
+
+    def _args(self, B=4, Bx=2, N=50, d=6):
+        return (jax.random.split(jax.random.PRNGKey(0), B),
+                jnp.zeros((Bx, N, d)), jnp.ones((B, N)))
+
+    def test_valid_shapes_pass(self):
+        keys, x, w = self._args()
+        g, ll = G.fit_gmm_batch(keys, x, w, G.GMMConfig(2, n_iter=2))
+        assert g["mu"].shape[0] == 4 and ll.shape == (4,)
+
+    def test_b_not_multiple_of_bx_raises(self):
+        keys, x, w = self._args(B=5, Bx=2)
+        with pytest.raises(ValueError, match="B=5.*Bx=2"):
+            G.fit_gmm_batch(keys, x, w, G.GMMConfig(2, n_iter=2))
+
+    def test_weights_must_be_2d(self):
+        keys, x, _ = self._args()
+        with pytest.raises(ValueError, match=r"weights must be \(B, N\)"):
+            G.fit_gmm_batch(keys, x, jnp.ones((50,)),
+                            G.GMMConfig(2, n_iter=2))
+
+    def test_x_must_be_3d(self):
+        keys, x, w = self._args()
+        with pytest.raises(ValueError, match=r"\(Bx, N, d\)"):
+            G.fit_gmm_batch(keys, x[0], w, G.GMMConfig(2, n_iter=2))
+
+    def test_sample_axis_mismatch_raises(self):
+        keys, x, _ = self._args()
+        with pytest.raises(ValueError, match="sample axis"):
+            G.fit_gmm_batch(keys, x, jnp.ones((4, 51)),
+                            G.GMMConfig(2, n_iter=2))
+
+    def test_key_count_mismatch_raises(self):
+        _, x, w = self._args()
+        with pytest.raises(ValueError, match="one PRNG key per fit"):
+            G.fit_gmm_batch(jax.random.split(jax.random.PRNGKey(0), 3),
+                            x, w, G.GMMConfig(2, n_iter=2))
+
+
+class TestTrilHelpers:
+    """The ONE row-major tril wire layout: pack_wire/unpack_wire and the
+    federation codec (fl.api._pack_cov/_unpack_cov) all delegate to
+    tril_pack/tril_unpack — layout parity is structural, not coincidental."""
+
+    def test_roundtrip_exact(self):
+        rng = np.random.RandomState(0)
+        a = rng.randn(3, 2, 5, 5).astype(np.float32)
+        sym = a + np.swapaxes(a, -1, -2)
+        packed = G.tril_pack(sym)
+        assert packed.shape == (3, 2, 15)
+        np.testing.assert_allclose(
+            np.asarray(G.tril_unpack(jnp.asarray(packed), 5)), sym,
+            rtol=1e-6, atol=1e-6)
+
+    def test_layout_is_row_major_tril(self):
+        """Explicit layout pin: element order is (0,0), (1,0), (1,1),
+        (2,0), … — the layout comm_bytes (Eqs. 9-11) counts."""
+        d = 4
+        m = np.arange(d * d, dtype=np.float32).reshape(d, d)
+        i, j = np.tril_indices(d)
+        np.testing.assert_array_equal(np.asarray(G.tril_pack(m)),
+                                      m[i, j])
+
+    def test_pack_wire_and_codec_share_helper(self, key):
+        """pack_wire and the codec's _pack_cov produce identical scalars
+        for the same covariance — and the codec functions ARE thin
+        wrappers over the gmm helpers (no second implementation to
+        drift)."""
+        from repro.fl import api as FA
+        x, _, _ = _mixture_data(d=6)
+        g, _ = G.fit_gmm(key, x, jnp.ones(x.shape[0]),
+                         G.GMMConfig(n_components=2, cov_type="full",
+                                     n_iter=3))
+        via_wire = np.asarray(G.pack_wire(g, "full")["cov"],
+                              dtype=np.float32)
+        via_codec = np.asarray(FA._pack_cov(np.asarray(g["cov"],
+                                                       np.float32), "full"))
+        np.testing.assert_allclose(via_wire, via_codec, rtol=1e-2,
+                                   atol=1e-2)  # bf16 vs f32 wire precision
+        d = g["cov"].shape[-1]
+        np.testing.assert_allclose(
+            np.asarray(G.unpack_wire(G.pack_wire(g, "full"), "full",
+                                     d)["cov"]),
+            FA._unpack_cov(via_codec, "full", d), rtol=1e-2, atol=1e-2)
+
+
 class TestSampling:
     @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
     def test_sample_statistics(self, key, cov):
