@@ -28,6 +28,40 @@ except ImportError:  # pragma: no cover
     from jax.shard_map import shard_map
 
 
+def validate_cohort(I: int, n_shards: int, *, where: str = "fedpft_transfer"
+                    ) -> None:
+    """Reject cohorts that don't shard evenly BEFORE shard_map is built.
+
+    Without this, an uneven cohort dies deep inside shard_map with a bare
+    "sharded dimension not divisible" shape error that names neither the
+    cohort nor the mesh.
+    """
+    if n_shards < 1:
+        raise ValueError(f"{where}: mesh 'data' axis must have >= 1 shard, "
+                         f"got {n_shards}")
+    if I % n_shards != 0:
+        valid = [n for n in range(1, I + 1) if I % n == 0]
+        raise ValueError(
+            f"{where}: cohort of I={I} clients does not shard evenly over "
+            f"the {n_shards}-way 'data' mesh axis (I % n_shards == "
+            f"{I % n_shards}). Each shard must own the same number of "
+            f"clients — pad the cohort with empty clients to a multiple of "
+            f"{n_shards}, or use a shard count that divides {I} "
+            f"(one of {valid}).")
+
+
+def data_axis_size(mesh, *, where: str = "fedpft_transfer") -> int:
+    """The mesh's client-sharding degree — with an actionable error when
+    the mesh has no "data" axis (shared by ``fl.api.FedSession``)."""
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"{where}: mesh has axes {tuple(mesh.axis_names)} but "
+            "the one-shot transfer shards clients over a 'data' axis — "
+            "build the mesh with launch.mesh.make_sim_mesh(n) (simulated "
+            "lane) or make_production_mesh()")
+    return mesh.shape["data"]
+
+
 def client_seeds(shard, I_local: int, seed: int) -> jax.Array:
     """Globally-unique per-client PRNG seeds for one shard.
 
@@ -47,9 +81,19 @@ def fedpft_transfer(mesh, feats: jax.Array, labels: jax.Array,
     labels: (I, N) with −1 padding.
 
     Returns (wire pytree stacked (I, C, K, …) REPLICATED on every shard,
-    counts (I, C)) — i.e. post-transfer server state.
+    counts (I, C), logliks (I, C)) — i.e. post-transfer server state.  The
+    wire pytree is ``gmm.pack_wire``'s bf16 layout — the SAME field set /
+    tril packing the host codec (``fl.api``) serializes, so
+    ``fl.api.messages_from_wire`` can account it byte-for-byte.  The
+    per-class EM log-likelihoods ride along (O(I·C) scalars next to the
+    O(I·C·K·d²) wire — the Theorem 6.1 bound evaluator needs them).
     """
     I = feats.shape[0]
+    validate_cohort(I, data_axis_size(mesh))
+    if labels.shape[0] != I:
+        raise ValueError(
+            f"fedpft_transfer: feats carries I={I} clients but labels "
+            f"carries {labels.shape[0]} — both lead with the client axis")
 
     def local(f, y):
         # f: (I_local, N, d); y: (I_local, N)
@@ -62,19 +106,21 @@ def fedpft_transfer(mesh, feats: jax.Array, labels: jax.Array,
 
         # the whole (I_local × C) stack of EM fits is one batched program
         # (a single pallas_call per EM iteration on TPU — DESIGN.md §8)
-        gmms, counts, _ = G.fit_classwise_gmms_batched(keys, f, y,
-                                                       n_classes, cfg)
+        gmms, counts, lls = G.fit_classwise_gmms_batched(keys, f, y,
+                                                         n_classes, cfg)
         packed = G.pack_wire(gmms, cfg.cov_type)
         # ---- the one-shot transfer: GMM parameters cross the mesh ----
         gathered = jax.tree.map(
             lambda a: jax.lax.all_gather(a, "data", axis=0, tiled=True),
             packed)
         counts_g = jax.lax.all_gather(counts, "data", axis=0, tiled=True)
-        return gathered, counts_g
+        lls_g = jax.lax.all_gather(lls, "data", axis=0, tiled=True)
+        return gathered, counts_g, lls_g
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P("data"), P("data")),
-                     out_specs=(P(), P()), check_rep=False)(feats, labels)
+                     out_specs=(P(), P(), P()), check_rep=False)(feats,
+                                                                 labels)
 
 
 def raw_feature_transfer(mesh, feats: jax.Array, labels: jax.Array):

@@ -334,18 +334,37 @@ def sample(key, gmm: Dict, n: int, cov_type: str) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # wire format / communication accounting (paper Eqs. 9-11)
+#
+# THE wire-layout contract: every path that moves GMM parameters —
+# the in-mesh bf16 all_gather (core/distributed.fedpft_transfer via
+# pack_wire) and the host-side byte codec (fl.api.QuantizedCodec via
+# encode_message) — serializes the same fields in WIRE_FIELDS order with
+# full covariances tril_pack'ed to packed_cov_shape.  There is exactly one
+# definition of each; fl/api delegates here rather than re-deriving.
 # ---------------------------------------------------------------------------
+
+WIRE_FIELDS = ("pi", "mu", "cov")
+
+
+def packed_cov_shape(cov_type: str, K: int, d: int) -> Tuple[int, ...]:
+    """Per-class shape of the ``cov`` wire leaf (full covs tril-packed)."""
+    if cov_type == "full":
+        return (K, d * (d + 1) // 2)
+    if cov_type == "diag":
+        return (K, d)
+    return (K,)
 
 
 def n_parameters(cov_type: str, d: int, K: int, C: int) -> int:
-    """Scalar count of one client's per-class GMM transfer."""
-    if cov_type == "full":
-        per = 2 * d + (d * d - d) // 2 + 1
-    elif cov_type == "diag":
-        per = 2 * d + 1
-    else:
-        per = d + 2
-    return per * K * C
+    """Scalar count of one client's per-class GMM transfer.
+
+    Derived from the wire layout itself (``WIRE_FIELDS`` /
+    :func:`packed_cov_shape`) so Eqs. 9-11 accounting can never drift from
+    what actually crosses the wire: pi (K,) + mu (K, d) + packed cov.
+    """
+    cov_scalars = int(np.prod(packed_cov_shape(cov_type, K, d),
+                              dtype=np.int64))
+    return (K + K * d + cov_scalars) * C
 
 
 def comm_bytes(cov_type: str, d: int, K: int, C: int,

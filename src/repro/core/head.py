@@ -96,8 +96,8 @@ def _streaming_step(key, params, opt_state, feats, labels, cfg: HeadConfig,
 
 
 def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
-                         n_classes: int,
-                         cfg: HeadConfig) -> Tuple[Dict, jax.Array]:
+                         n_classes: int, cfg: HeadConfig,
+                         chunk_sharding=None) -> Tuple[Dict, jax.Array]:
     """Train a linear head over (feats, labels) chunks WITHOUT pooling them.
 
     Each step picks a chunk with probability ∝ its row count and draws its
@@ -112,6 +112,13 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     Returns (head params, per-step loss trace), matching ``train_head``'s
     contract — including the N=0 guard: a chunk list with zero total rows
     returns the freshly-initialized head and an empty loss trace.
+
+    ``chunk_sharding``: an optional ``jax.sharding.Sharding`` every chunk
+    is pinned to before stepping.  The mesh-mode server (fl/api,
+    DESIGN.md §5) passes the replicated layout so the per-chunk jits see
+    one placement regardless of what the data-parallel sampling left
+    behind — without it, each (shape, sharding) pair would compile its own
+    step.
     """
     if not chunks:
         raise ValueError("train_head_streaming needs at least one chunk "
@@ -119,6 +126,18 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     d = int(chunks[0][0].shape[1])
     chunks = [(jnp.asarray(f, jnp.float32), jnp.asarray(y))
               for f, y in chunks if int(f.shape[0]) > 0]
+    # dim agreement checked on the surviving chunks only: an all-filtered
+    # group's (0, d') placeholder must not abort a well-defined round
+    dims = sorted({int(f.shape[1]) for f, _ in chunks})
+    if len(dims) > 1:
+        raise ValueError(
+            f"train_head_streaming: chunks disagree on the feature dim "
+            f"(saw d ∈ {dims}) — one head cannot train over mixed feature "
+            "spaces; synthesize each cohort group separately")
+    d = dims[0] if dims else d
+    if chunk_sharding is not None:
+        chunks = [(jax.device_put(f, chunk_sharding),
+                   jax.device_put(y, chunk_sharding)) for f, y in chunks]
     k_init, k_assign, k_steps = jax.random.split(key, 3)
     if not chunks:
         return (init_head(k_init, d, n_classes),

@@ -23,6 +23,15 @@ no two slots ever share a key, whatever the bucketing.  (The realized
 values still depend on the bucket's padded S — policies are equal in
 distribution, not bitwise.)  Bucket chunks can stream
 straight into ``core.head.train_head_streaming`` without pooling.
+
+Mesh execution (DESIGN.md §5): ``FedSession(mesh=…)`` or ``shards=n``
+routes the round through :meth:`FedSession.run_sharded` — client fits as
+one ``shard_map``'d batched EM per shard, the bf16 wire crossing the mesh
+in a single ``all_gather`` (``core.distributed.fedpft_transfer``), and
+the server phase data-parallel on the replicated parameters.  The wire
+layout is ONE contract shared with the host codec (``gmm.WIRE_FIELDS`` /
+``gmm.tril_pack``): :func:`messages_from_wire` turns the gathered pytree
+into byte-accurate :class:`ClientMessage`s.
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.core import distributed as DF
 from repro.core import dp as DP
 from repro.core import gmm as G
 from repro.core import head as H
@@ -43,8 +53,9 @@ from repro.fl import planner as P
 __all__ = [
     "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
     "HeadSummarizer", "Star", "Chain", "Ring", "FedSession", "SessionResult",
-    "encode_message", "stack_messages", "synthesize_batched",
-    "synthesize_chunks", "synthesize_group_chunks", "synthesize_looped",
+    "encode_message", "stack_messages", "messages_from_wire",
+    "synthesize_batched", "synthesize_chunks", "synthesize_group_chunks",
+    "synthesize_looped",
 ]
 
 # ---------------------------------------------------------------------------
@@ -57,8 +68,9 @@ _WIRE_DTYPES = {
     "float32": np.float32,
 }
 
-# serialization order of the GMM wire pytree (explicit, not tree-sort)
-_GMM_FIELDS = ("pi", "mu", "cov")
+# serialization order of the GMM wire pytree — THE layout contract lives in
+# core/gmm (shared with the in-mesh pack_wire path), not here
+_GMM_FIELDS = G.WIRE_FIELDS
 _HEAD_FIELDS = ("w", "b")
 
 
@@ -126,11 +138,8 @@ class WireHeader:
 
 
 def _packed_cov_shape(cov_type: str, Cp: int, K: int, d: int):
-    if cov_type == "full":
-        return (Cp, K, d * (d + 1) // 2)
-    if cov_type == "diag":
-        return (Cp, K, d)
-    return (Cp, K)
+    """Wire shape of ``Cp`` present classes' cov leaf — gmm owns the layout."""
+    return (Cp,) + G.packed_cov_shape(cov_type, K, d)
 
 
 def _pack_cov(cov: np.ndarray, cov_type: str) -> np.ndarray:
@@ -255,6 +264,39 @@ def stack_messages(messages: Sequence[ClientMessage]) -> Dict[str, jax.Array]:
                         *[m.params for m in messages])
 
 
+def messages_from_wire(wire: Dict[str, jax.Array], counts, cov_type: str,
+                       n_classes: int, codec: QuantizedCodec,
+                       logliks=None) -> List[ClientMessage]:
+    """Replicated mesh wire pytree → per-client :class:`ClientMessage` list.
+
+    ``wire`` is what ``core.distributed.fedpft_transfer``'s all_gather left
+    on every shard: ``gmm.pack_wire``'s bf16 stacked ``(I, C, K, …)``
+    layout, full covs tril-packed.  Because the mesh path and the codec
+    share ONE layout contract (``gmm.WIRE_FIELDS`` / ``gmm.tril_pack``),
+    this is just ``gmm.unpack_wire`` followed by the same
+    :func:`encode_message` a host client runs — with a bf16 codec each
+    present class's payload scalars are bit-identical to what crossed the
+    mesh.  ``comm_bytes`` keeps the host codec's semantics (Eqs. 9-11
+    over PRESENT classes); the padded collective also carries absent
+    classes' placeholder params — ``run_sharded`` reports that total
+    separately as ``info["mesh_wire_bytes"]``.
+    """
+    counts = np.asarray(jax.device_get(counts)).astype(np.int64)
+    I = counts.shape[0]
+    d = int(wire["mu"].shape[-1])
+    unpacked = G.unpack_wire({k: np.asarray(jax.device_get(v))
+                              for k, v in wire.items()}, cov_type, d)
+    if logliks is None:
+        logliks = np.zeros((I, n_classes), np.float32)
+    return [
+        encode_message({k: np.asarray(v[i], np.float32)
+                        for k, v in unpacked.items()},
+                       counts[i], np.asarray(logliks)[i], kind="gmm",
+                       cov_type=cov_type, n_classes=n_classes, codec=codec)
+        for i in range(I)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # planned server-side synthesis — one jitted sample per count bucket
 # ---------------------------------------------------------------------------
@@ -294,9 +336,34 @@ def _sample_stacked(key, slot_ids, pi, mu, cov, S: int,
     return jax.vmap(one)(keys, pi, mu, cov)
 
 
+def _shard_bucket(mesh, slots, arrays):
+    """Lay one bucket's flat ``(G_b, …)`` stacks out data-parallel over the
+    mesh's "data" axis.
+
+    The pow2 planner produces arbitrary bucket sizes, so the stack is
+    first padded to a multiple of the axis (repeating the last slot —
+    the caller slices the padding rows back off the samples) and then
+    placed ``P("data")``: every device really owns ``⌈G_b/n⌉`` slots
+    instead of silently replicating the whole bucket.
+
+    Values are sharding-independent: every slot's draw is keyed by its
+    *global* slot id inside :func:`_sample_stacked` and no op crosses
+    slots, so sharding (and the discarded padding) moves FLOPs across
+    devices without changing a bit of the result — the
+    shard-count-invariance tests lean on this.
+    """
+    n = mesh.shape["data"]
+    pad = (-int(slots.shape[0])) % n
+    grow = lambda a: jnp.concatenate(
+        [a, jnp.repeat(a[-1:], pad, axis=0)]) if pad else a
+    put = lambda a: jax.device_put(grow(a), jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data")))
+    return put(slots), tuple(put(a) for a in arrays)
+
+
 def synthesize_group_chunks(key, items,
                             samples_per_class: Optional[int] = None,
-                            policy: str = "pow2"
+                            policy: str = "pow2", mesh=None
                             ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
                                        List[P.SynthesisPlan]]:
     """Planned synthesis over a possibly-heterogeneous cohort → chunk list.
@@ -323,7 +390,7 @@ def synthesize_group_chunks(key, items,
                            members])
         ch, plan = synthesize_chunks(jax.random.fold_in(key, gi), batch,
                                      counts, sig[0], samples_per_class,
-                                     policy=policy)
+                                     policy=policy, mesh=mesh)
         chunks.extend(ch)
         plans.append(plan)
     return chunks, plans
@@ -345,7 +412,8 @@ def synthesize_chunks(key, batch: Dict[str, jax.Array], counts,
                       cov_type: str,
                       samples_per_class: Optional[int] = None,
                       policy: str = "pow2",
-                      plan: Optional[P.SynthesisPlan] = None
+                      plan: Optional[P.SynthesisPlan] = None,
+                      mesh=None
                       ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
                                  P.SynthesisPlan]:
     """Algorithm 1, lines 13-16, executed bucket-by-bucket.
@@ -368,6 +436,10 @@ def synthesize_chunks(key, batch: Dict[str, jax.Array], counts,
     ``(chunks, plan)``; chunks is a list of compacted ``(feats (n, d),
     labels (n,))`` pairs in ascending-bucket order, and is never empty —
     an all-zero cohort yields one ``(0, d)`` chunk.
+
+    ``mesh``: lay each bucket's slot stack out data-parallel over the
+    mesh's "data" axis before sampling (:func:`_shard_bucket`) — same
+    values, FLOPs spread across shards.
     """
     counts = np.asarray(jax.device_get(counts), np.int64)
     if counts.ndim == 1:
@@ -391,9 +463,14 @@ def synthesize_chunks(key, batch: Dict[str, jax.Array], counts,
     chunks = []
     for b in plan.buckets:
         slots = jnp.asarray(b.slots)
-        samples = _sample_stacked(key, slots, flat["pi"][slots],
-                                  flat["mu"][slots], flat["cov"][slots],
+        stacks = (flat["pi"][slots], flat["mu"][slots], flat["cov"][slots])
+        if mesh is not None:
+            # data-parallel server phase: each device samples its share of
+            # the bucket's slots (mesh mode, DESIGN.md §5)
+            slots, stacks = _shard_bucket(mesh, slots, stacks)
+        samples = _sample_stacked(key, slots, *stacks,
                                   b.S, cov_type)               # (G_b, S, d)
+        samples = samples[: len(b.slots)]   # drop _shard_bucket's padding
         # compact away the padding rows host-side: one gather per bucket
         keep = np.arange(b.S)[None, :] < b.n_eff[:, None]      # (G_b, S)
         idx = np.flatnonzero(keep)
@@ -596,6 +673,10 @@ class FedSession:
     stream_synthesis: bool = False  # train the head on per-bucket chunks
     #   without pooling: server peak memory stays O(largest bucket) instead
     #   of O(Σcounts · d) + the padded block (DESIGN.md §2)
+    # -- mesh execution mode (DESIGN.md §5) ---------------------------------
+    mesh: Any = None               # jax Mesh with a "data" axis, or None
+    shards: Optional[int] = None   # convenience: make_sim_mesh(shards)
+    transfer_seed: int = 0         # per-client PRNG base for the mesh round
 
     # -- plumbing -----------------------------------------------------------
 
@@ -669,15 +750,16 @@ class FedSession:
 
     # -- server side --------------------------------------------------------
 
-    def _synthesize_all(self, key, messages: Sequence[ClientMessage]
+    def _synthesize_all(self, key, messages: Sequence[ClientMessage],
+                        mesh=None
                         ) -> Tuple[List[Tuple[jax.Array, jax.Array]],
                                    List[P.SynthesisPlan]]:
         return synthesize_group_chunks(
             key, [(m.params, m.counts, m.header.cov_type)
-                  for m in messages], self.samples_per_class)
+                  for m in messages], self.samples_per_class, mesh=mesh)
 
-    def server_aggregate(self, key, messages: Sequence[ClientMessage]
-                         ) -> SessionResult:
+    def server_aggregate(self, key, messages: Sequence[ClientMessage],
+                         mesh=None) -> SessionResult:
         if not messages:
             raise ValueError("server_aggregate needs at least one message")
         comm = sum(m.comm_bytes for m in messages)
@@ -685,7 +767,7 @@ class FedSession:
         kind = messages[0].header.kind
         if kind == "gmm":
             k_syn, k_head = jax.random.split(key)
-            chunks, plans = self._synthesize_all(k_syn, messages)
+            chunks, plans = self._synthesize_all(k_syn, messages, mesh=mesh)
             info["synthesis_plans"] = plans
             n_syn = sum(int(f.shape[0]) for f, _ in chunks)
             if n_syn == 0:
@@ -700,13 +782,23 @@ class FedSession:
                 return SessionResult(model=H.init_head(k_head, d,
                                                        self.n_classes),
                                      info=info, messages=list(messages))
+            # head training runs replicated on every shard (same RNG, same
+            # steps) — pin the chunks to an explicit replicated layout so
+            # the per-chunk jits see ONE sharding whatever the sampling
+            # left behind (DESIGN.md §5)
+            repl = None if mesh is None else jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
             if self.stream_synthesis:
                 head_params, losses = H.train_head_streaming(
-                    k_head, chunks, self.n_classes, self.head)
+                    k_head, chunks, self.n_classes, self.head,
+                    chunk_sharding=repl)
                 info.update(synthetic_chunks=chunks, head_losses=losses)
             else:
                 feats = jnp.concatenate([f for f, _ in chunks])
                 labels = jnp.concatenate([y for _, y in chunks])
+                if repl is not None:
+                    feats = jax.device_put(feats, repl)
+                    labels = jax.device_put(labels, repl)
                 head_params, losses = H.train_head(k_head, feats, labels,
                                                    self.n_classes, self.head)
                 info.update(synthetic_feats=feats, synthetic_labels=labels,
@@ -727,8 +819,121 @@ class FedSession:
             raise ValueError(self.aggregate)
         return SessionResult(model=model, info=info, messages=list(messages))
 
+    # -- mesh execution mode (DESIGN.md §5) ---------------------------------
+
+    def _resolve_mesh(self):
+        if self.mesh is not None:
+            n = DF.data_axis_size(self.mesh, where="FedSession")
+            if self.shards is not None and self.shards != n:
+                raise ValueError(
+                    f"FedSession: mesh= is {n}-way on 'data' but shards="
+                    f"{self.shards} — they disagree; pass one, or make "
+                    "them match")
+            return self.mesh
+        if self.shards is None:
+            raise ValueError(
+                "FedSession: sharded execution needs mesh= (a jax Mesh "
+                "with a 'data' axis) or shards=n (builds "
+                "launch.mesh.make_sim_mesh(n) over the host's devices)")
+        from repro.launch.mesh import make_sim_mesh
+        return make_sim_mesh(self.shards)
+
+    def _check_sharded_config(self, I: int, n_shards: int) -> None:
+        """Every mesh-mode precondition, checked BEFORE any device work."""
+        DF.validate_cohort(I, n_shards, where="FedSession(sharded)")
+        if self.client_summarizers is not None:
+            raise NotImplementedError(
+                "FedSession(sharded): heterogeneous client_summarizers "
+                "can't batch into one shard_map program — run the host "
+                "Star path for mixed-K/cov cohorts (paper §6.3)")
+        if self.summarizer.kind != "gmm":
+            raise NotImplementedError(
+                "FedSession(sharded): the mesh round fits GMM summaries "
+                "(core.distributed.fedpft_transfer); head-summary "
+                "baselines run on the host Star path")
+        if self.dp is not None:
+            raise NotImplementedError(
+                "FedSession(sharded): the DP mechanism (Theorem 4.1) is "
+                "applied host-side before encoding — run the host Star "
+                "path with dp=, or privatize before calling run_sharded")
+        if not isinstance(self.topology, Star):
+            raise NotImplementedError(
+                f"FedSession(sharded): the one-shot all_gather IS the Star "
+                f"round; {self.topology.name!r} topologies are host-only")
+        if self.codec.dtype != "bfloat16":
+            raise ValueError(
+                f"FedSession(sharded): the mesh wire is bf16 "
+                f"(gmm.pack_wire) but the codec is {self.codec.dtype!r} — "
+                "comm accounting would not match the collective. Use "
+                "QuantizedCodec('bfloat16') or the host path for fp16/fp32 "
+                "wire ablations")
+
+    def run_sharded(self, key, feats: jax.Array, labels: jax.Array
+                    ) -> SessionResult:
+        """One-shot round as mesh collectives (DESIGN.md §5).
+
+        ``feats``: (I, N, d) — I clients, N padded samples; ``labels``:
+        (I, N) with −1 padding.  Client phase: each shard of the "data"
+        axis fits its I/n_shards clients' classwise GMMs as ONE batched EM
+        (per-client PRNG seeds offset by the shard's global client base,
+        ``transfer_seed + i`` for client i) and ``all_gather``s the bf16
+        wire pytree — that collective is the round.  Server phase: the
+        replicated wire decodes through the SAME codec layout host clients
+        use (:func:`messages_from_wire`), then planner-bucketed synthesis
+        runs data-parallel over the mixture slots and the head trains
+        replicated on every shard.  Results are shard-count invariant up
+        to wire precision (tests/multidevice).
+        """
+        n_shards = self.shards if self.mesh is None and \
+            self.shards is not None else None
+        if n_shards is not None:
+            # divisibility is checkable before building the mesh — a
+            # too-small host should complain about XLA_FLAGS, not shapes
+            DF.validate_cohort(feats.shape[0], n_shards,
+                               where="FedSession(sharded)")
+        mesh = self._resolve_mesh()
+        self._check_sharded_config(feats.shape[0], mesh.shape["data"])
+        feats = self._normalize(feats)
+        wire, counts, lls = DF.fedpft_transfer(mesh, feats, labels,
+                                               self.n_classes,
+                                               self.summarizer.gmm,
+                                               seed=self.transfer_seed)
+        counts = np.asarray(jax.device_get(counts)).astype(np.int64)
+        if self.min_class_count:
+            counts = np.where(counts >= self.min_class_count, counts, 0)
+        messages = messages_from_wire(wire, counts,
+                                      self.summarizer.cov_type,
+                                      self.n_classes, self.codec,
+                                      logliks=jax.device_get(lls))
+        result = self.server_aggregate(key, messages, mesh=mesh)
+        g = self.summarizer.gmm
+        result.info.update(
+            n_shards=int(mesh.shape["data"]),
+            mesh_axes=tuple(mesh.axis_names),
+            # what the collective itself moved: the full padded (I, C, …)
+            # bf16 pytree — absent / min_class_count-filtered classes still
+            # cross the mesh, unlike the host codec's present-class payloads
+            # (comm_bytes)
+            mesh_wire_bytes=DF.expected_wire_bytes(
+                g.cov_type, feats.shape[-1], g.n_components,
+                self.n_classes, feats.shape[0]))
+        return result
+
     # -- entry point --------------------------------------------------------
 
     def run(self, key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]]
             ) -> SessionResult:
+        if self.mesh is not None or self.shards is not None:
+            shapes = {(tuple(np.shape(f)), tuple(np.shape(y)))
+                      for f, y in client_datasets}
+            if len(shapes) != 1:
+                raise ValueError(
+                    f"FedSession(sharded): clients must share one "
+                    f"(N, d) / (N,) feats/labels shape to stack into the "
+                    f"mesh round, got {sorted(shapes)} — pad to a common N "
+                    "with label −1 rows, or run the host path (mesh=None, "
+                    "shards=None)")
+            feats = jnp.stack([jnp.asarray(f) for f, _ in client_datasets])
+            labels = jnp.stack([jnp.asarray(y) for _, y in client_datasets])
+            return self.run_sharded(key, feats, labels)
         return self.topology.run(key, self, client_datasets)

@@ -2,6 +2,7 @@
 
 Single pod:  (16, 16)      axes ("data", "model")   — 256 chips (v5e pod)
 Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+Simulated:   (n,)          axis  ("data",)          — first n host devices
 
 A FUNCTION, not a module constant: importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before first jax init).
@@ -9,6 +10,7 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 # TPU v5e hardware constants (per chip) — used by the roofline model.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
@@ -26,6 +28,29 @@ def make_host_mesh():
     """Whatever this host actually has (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_sim_mesh(n: int):
+    """n-way "data" mesh over the FIRST n host devices, in device order.
+
+    The simulated multi-device lane builds 1-, 2- and 8-shard meshes over
+    the same faked host devices (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8``) to assert shard-count invariance — so the device
+    order must be deterministic, not performance-permuted like
+    ``jax.make_mesh``'s.
+    """
+    if n < 1:
+        raise ValueError(f"make_sim_mesh: need n >= 1 shards, got {n}")
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"make_sim_mesh({n}): this host exposes only {len(devs)} "
+            f"device(s). Simulate more with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} set BEFORE jax "
+            "initializes — tests/conftest.py deliberately leaves the host "
+            "at its real count, so the multidevice lane spawns a fresh "
+            "subprocess (tests/_spawn.py) with the flag set.")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
 
 
 def data_axes(mesh) -> tuple:

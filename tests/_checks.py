@@ -1,0 +1,16 @@
+"""Shared test assertion helpers.
+
+Importable from every lane (``from _checks import assert_finite``) — unlike
+``conftest.py``, whose module name pytest owns, so helpers defined there
+can't be imported by test modules in other directories (the multidevice
+lane runs from ``tests/multidevice/``).  ``tests/conftest.py`` re-exports
+:func:`assert_finite` for the modules that historically reached it there.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def assert_finite(tree, msg=""):
+    for leaf in jax.tree.leaves(tree):
+        assert bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32)))), \
+            f"non-finite values {msg}"

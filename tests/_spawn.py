@@ -1,0 +1,49 @@
+"""Spawn the multidevice lane in a fresh interpreter with simulated devices.
+
+XLA fixes the host platform's device count at first jax initialization,
+and ``tests/conftest.py`` deliberately leaves it at the real hardware
+count (1 CPU in CI) — so any test that needs >1 device must run in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+exported before python starts.  This module is that runner:
+
+    python tests/_spawn.py            # the lane, 8 simulated devices
+    pytest -m slow tests/test_multidevice_lane.py   # same, under pytest
+
+or equivalently by hand:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q -m multidevice
+"""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice_lane(n_devices: int = 8, extra_args=(), timeout=580):
+    """Run ``pytest -m multidevice`` on tests/multidevice with ``n_devices``
+    simulated host devices; returns the CompletedProcess."""
+    env = dict(os.environ)
+    # replace (not just append) any existing device-count flag: a stale
+    # exported count from interactive experimentation must not override
+    # the n_devices this lane was asked for
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count="
+                        f"{n_devices}").strip()
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "multidevice",
+         os.path.join(ROOT, "tests", "multidevice"), *extra_args],
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=ROOT)
+
+
+if __name__ == "__main__":
+    r = run_multidevice_lane()
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr)
+    sys.exit(r.returncode)

@@ -1,9 +1,13 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
-the host's real device count (1 CPU); only launch/dryrun.py fakes 512."""
+the host's real device count (1 CPU); launch/dryrun.py fakes 512 and the
+multidevice lane (tests/multidevice, spawned via tests/_spawn.py) fakes 8."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _checks import assert_finite  # re-export: helpers live in _checks
+
+__all__ = ["assert_finite"]
 
 
 @pytest.fixture(scope="session")
@@ -14,9 +18,3 @@ def rng():
 @pytest.fixture()
 def key():
     return jax.random.PRNGKey(0)
-
-
-def assert_finite(tree, msg=""):
-    for leaf in jax.tree.leaves(tree):
-        assert bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32)))), \
-            f"non-finite values {msg}"

@@ -1,0 +1,28 @@
+"""Multidevice lane conftest.
+
+Two jobs: put ``tests/`` on sys.path so the lane can import the shared
+helpers (``_checks``) when invoked on this directory alone, and skip the
+whole lane when the host wasn't launched with simulated devices — the
+device count is frozen at first jax init, so it cannot be raised here;
+``tests/_spawn.py`` exists precisely to relaunch with the flag set.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    # NOTE: this hook sees the WHOLE session's items, not just this
+    # directory's — filter on the marker, or the skip leaks suite-wide.
+    if jax.device_count() >= 2:
+        return
+    skip = pytest.mark.skip(
+        reason="needs >= 2 devices — run tests/_spawn.py, or set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8 before pytest")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)

@@ -24,13 +24,16 @@ def test_transfer_matches_direct_fit(key, mesh):
     labels = y[: I * N].reshape(I, N)
     cfg = G.GMMConfig(n_components=2, cov_type="diag", n_iter=8)
     with mesh:
-        wire, counts = DF.fedpft_transfer(mesh, feats, labels, 4, cfg)
+        wire, counts, lls = DF.fedpft_transfer(mesh, feats, labels, 4, cfg)
     assert wire["mu"].shape == (I, 4, 2, 8)
     assert counts.shape == (I, 4)
+    assert lls.shape == (I, 4)
     # same per-client fit as the sequential path (same seeds)
     for i in range(I):
-        gmms, cnt, _ = G.fit_classwise_gmms(
+        gmms, cnt, ll_i = G.fit_classwise_gmms(
             jax.random.PRNGKey(i), feats[i], labels[i], 4, cfg)
+        np.testing.assert_allclose(np.asarray(lls[i]), np.asarray(ll_i),
+                                   rtol=1e-4, atol=1e-4)
         packed = G.pack_wire(gmms, "diag")
         np.testing.assert_allclose(
             np.asarray(wire["mu"][i], np.float32),
@@ -54,6 +57,57 @@ def test_client_seeds_disjoint_across_shards():
     # shard s owns the contiguous global client block [s·I, (s+1)·I)
     np.testing.assert_array_equal(
         flat, np.arange(n_shards * I_local, dtype=np.uint32) + seed)
+
+
+class FakeDataMesh:
+    """Mesh stand-in: validation must fire BEFORE shard_map ever sees the
+    mesh, so a shape-only fake is enough to unit-test it on a 1-CPU host."""
+    axis_names = ("data",)
+    shape = {"data": 3}
+
+
+def test_uneven_cohort_fails_fast():
+    """I % n_shards != 0 raises an actionable ValueError at the API
+    boundary — not a bare divisibility shape error deep inside shard_map."""
+    feats = jnp.zeros((4, 8, 4))
+    labels = jnp.zeros((4, 8), jnp.int32)
+    with pytest.raises(ValueError, match="does not shard evenly"):
+        DF.fedpft_transfer(FakeDataMesh(), feats, labels, 2,
+                           G.GMMConfig(n_components=2, n_iter=2))
+    with pytest.raises(ValueError) as e:
+        DF.validate_cohort(10, 4)
+    # the message names the cohort, the mesh, and the valid shard counts
+    assert "I=10" in str(e.value) and "4-way" in str(e.value)
+    assert "[1, 2, 5, 10]" in str(e.value)
+    DF.validate_cohort(10, 5)  # dividing counts pass silently
+
+
+def test_mesh_without_data_axis_fails_fast():
+    class ModelOnlyMesh:
+        axis_names = ("model",)
+        shape = {"model": 2}
+    with pytest.raises(ValueError, match="'data' axis"):
+        DF.fedpft_transfer(ModelOnlyMesh(), jnp.zeros((2, 4, 2)),
+                           jnp.zeros((2, 4), jnp.int32), 2,
+                           G.GMMConfig(n_components=1, n_iter=1))
+
+
+def test_client_axis_mismatch_fails_fast():
+    with pytest.raises(ValueError, match="client axis"):
+        DF.fedpft_transfer(FakeDataMesh(), jnp.zeros((3, 4, 2)),
+                           jnp.zeros((2, 4), jnp.int32), 2,
+                           G.GMMConfig(n_components=1, n_iter=1))
+
+
+def test_make_sim_mesh_is_actionable_when_devices_missing():
+    """The 1-CPU pytest host can't build a 2-shard sim mesh — the error
+    must say how to launch the multidevice lane, not just fail."""
+    from repro.launch.mesh import make_sim_mesh
+    if len(jax.devices()) > 1:
+        pytest.skip("host already multi-device")
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_sim_mesh(2)
+    assert make_sim_mesh(1).shape["data"] == 1
 
 
 def test_raw_transfer_roundtrip(key, mesh):

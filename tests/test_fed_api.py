@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro import data as D
 from repro.core import decentralized as DC
 from repro.core import dp as DP
@@ -315,3 +316,176 @@ class TestFedSessionPaths:
         from repro.fl import baselines as FB
         pred = FB.ensemble_predict(res_e.model, xt)
         assert float(jnp.mean((pred == yt).astype(jnp.float32))) > 0.6
+
+
+# ---------------------------------------------------------------------------
+# mesh execution mode (host lane: 1 device; shard-count invariance proper
+# lives in tests/multidevice, spawned with 8 simulated devices)
+# ---------------------------------------------------------------------------
+
+
+class TestMeshMode:
+    def _cohort(self, dataset, n_clients=2):
+        x, y, *_ = dataset
+        N = (len(y) // n_clients // N_CLASSES) * N_CLASSES
+        feats = jnp.asarray(x[: n_clients * N]).reshape(n_clients, N, DIM)
+        labels = jnp.asarray(y[: n_clients * N]).reshape(n_clients, N)
+        return feats, labels
+
+    def test_run_sharded_accounts_the_mesh_wire(self, key, dataset):
+        """The 1-shard mesh session reports comm_bytes == Σ len(payload)
+        == Eqs. 9-11 — the mesh path and the codec share one layout."""
+        feats, labels = self._cohort(dataset)
+        sess = _gmm_session(shards=1, stream_synthesis=True)
+        res = sess.run_sharded(key, feats, labels)
+        assert res.info["n_shards"] == 1
+        assert res.info["comm_bytes"] == \
+            sum(len(m.payload) for m in res.messages)
+        # the shuffled dataset leaves every class present on both clients
+        assert res.info["comm_bytes"] == \
+            2 * G.comm_bytes("diag", DIM, 2, N_CLASSES, 2)
+        # the padded collective itself moves the full (I, C, …) pytree
+        assert res.info["mesh_wire_bytes"] == \
+            2 * G.comm_bytes("diag", DIM, 2, N_CLASSES, 2)
+        for m in res.messages:
+            assert m.header.dtype == "bfloat16"
+            # real EM logliks crossed the mesh, not fabricated zeros
+            assert any(ll != 0.0 for ll in m.logliks)
+        for leaf in jax.tree.leaves(res.model):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_run_dispatches_to_sharded(self, key, dataset):
+        """run() with shards= stacks the client list and runs the mesh
+        path — same result as calling run_sharded directly."""
+        feats, labels = self._cohort(dataset)
+        sess = _gmm_session(shards=1)
+        direct = sess.run_sharded(key, feats, labels)
+        via_run = sess.run(key, [(feats[i], labels[i])
+                                 for i in range(feats.shape[0])])
+        for p in ("w", "b"):
+            np.testing.assert_array_equal(np.asarray(direct.model[p]),
+                                          np.asarray(via_run.model[p]))
+
+    def test_messages_from_wire_matches_host_codec(self, key, dataset):
+        """gmm.pack_wire → messages_from_wire re-encodes BYTE-identical
+        payloads to the host client_update path: one wire layout, two
+        transports."""
+        x, y, *_ = dataset
+        sess = _gmm_session(cov="full")
+        msgs = [sess.client_update(k, x, y)
+                for k in jax.random.split(key, 2)]
+        wire = jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[G.pack_wire(m.params, "full")
+                              for m in msgs])
+        counts = np.stack([m.counts for m in msgs])
+        rebuilt = FA.messages_from_wire(wire, counts, "full", N_CLASSES,
+                                        sess.codec)
+        for orig, re_m in zip(msgs, rebuilt):
+            assert re_m.payload == orig.payload
+            assert re_m.comm_bytes == orig.comm_bytes
+            for f in G.WIRE_FIELDS:
+                np.testing.assert_array_equal(np.asarray(orig.params[f]),
+                                              np.asarray(re_m.params[f]))
+
+    def test_uneven_cohort_fails_fast_at_session_level(self, key, dataset):
+        feats, labels = self._cohort(dataset, n_clients=2)
+        sess = _gmm_session(shards=3)
+        with pytest.raises(ValueError, match="does not shard evenly"):
+            sess.run_sharded(key, feats, labels)
+
+    def test_sharded_preconditions_are_actionable(self, key, dataset):
+        feats, labels = self._cohort(dataset)
+        base = _gmm_session(shards=1)
+        with pytest.raises(ValueError, match="bfloat16"):
+            dataclasses.replace(
+                base, codec=FA.QuantizedCodec("float16")
+            ).run_sharded(key, feats, labels)
+        with pytest.raises(NotImplementedError, match="Star"):
+            dataclasses.replace(base, topology=FA.Chain()
+                                ).run_sharded(key, feats, labels)
+        with pytest.raises(NotImplementedError, match="host"):
+            dataclasses.replace(
+                base, summarizer=FA.HeadSummarizer()
+            ).run_sharded(key, feats, labels)
+        with pytest.raises(ValueError, match="mesh=.*shards"):
+            FA.FedSession(n_classes=N_CLASSES).run_sharded(key, feats,
+                                                           labels)
+        from repro.launch.mesh import make_sim_mesh
+        with pytest.raises(ValueError, match="disagree"):
+            dataclasses.replace(base, mesh=make_sim_mesh(1), shards=2
+                                ).run_sharded(key, feats, labels)
+        with pytest.raises(ValueError, match="share one"):
+            _gmm_session(shards=1).run(
+                key, [(feats[0], labels[0]), (feats[1, :8], labels[1, :8])])
+
+
+# ---------------------------------------------------------------------------
+# QuantizedCodec round-trip properties (satellite: hypothesis, slow lane;
+# the deterministic grid below runs everywhere — _hyp skips @given tests
+# when hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+
+_CODEC_TOL = {"float16": (2e-3, 2e-3), "bfloat16": (1e-2, 1e-2),
+              "float32": (1e-6, 1e-6)}
+
+
+def _check_codec_roundtrip(cov, dtype, d, K, C, seed):
+    rng = np.random.RandomState(seed)
+    counts = rng.randint(0, 40, size=C).astype(np.int64)
+    pi = rng.dirichlet(np.ones(K), size=C).astype(np.float32)
+    mu = (rng.randn(C, K, d) * 4).astype(np.float32)
+    if cov == "full":
+        a = rng.randn(C, K, d, d).astype(np.float32)
+        cov_arr = 0.5 * np.einsum("ckde,ckfe->ckdf", a, a) \
+            + 0.1 * np.eye(d, dtype=np.float32)
+    elif cov == "diag":
+        cov_arr = (0.1 + rng.rand(C, K, d)).astype(np.float32)
+    else:
+        cov_arr = (0.1 + rng.rand(C, K)).astype(np.float32)
+    codec = FA.QuantizedCodec(dtype)
+    msg = FA.encode_message({"pi": pi, "mu": mu, "cov": cov_arr}, counts,
+                            np.zeros(C, np.float32), kind="gmm",
+                            cov_type=cov, n_classes=C, codec=codec)
+    # comm accounting: actual bytes, and exactly Eqs. 9-11 at this precision
+    present = np.flatnonzero(counts > 0)
+    assert msg.comm_bytes == len(msg.payload)
+    assert msg.comm_bytes == G.comm_bytes(cov, d, K, len(present),
+                                          codec.bytes_per_scalar)
+    # shapes survive the round trip (decoded params are always stacked C)
+    assert msg.params["pi"].shape == (C, K)
+    assert msg.params["mu"].shape == (C, K, d)
+    assert msg.params["cov"].shape == cov_arr.shape
+    # present-class values stay within the wire dtype's tolerance
+    rtol, atol = _CODEC_TOL[dtype]
+    for name, ref in (("pi", pi), ("mu", mu), ("cov", cov_arr)):
+        np.testing.assert_allclose(
+            np.asarray(msg.params[name])[present], ref[present],
+            rtol=rtol, atol=atol * max(1.0, np.abs(ref).max()),
+            err_msg=f"{cov}/{dtype} field {name!r}")
+    # idempotence: a second trip through the codec is byte-identical
+    msg2 = FA.encode_message(
+        {k: np.asarray(v) for k, v in msg.params.items()}, counts,
+        np.zeros(C, np.float32), kind="gmm", cov_type=cov, n_classes=C,
+        codec=codec)
+    assert msg2.payload == msg.payload
+
+
+@pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+@pytest.mark.parametrize("dtype", ["float16", "bfloat16", "float32"])
+def test_codec_roundtrip_grid(cov, dtype):
+    """Deterministic corner of the property test — always runs."""
+    _check_codec_roundtrip(cov, dtype, d=5, K=2, C=4, seed=0)
+    _check_codec_roundtrip(cov, dtype, d=1, K=1, C=1, seed=1)
+
+
+@pytest.mark.slow
+@given(cov=st.sampled_from(["full", "diag", "spher"]),
+       dtype=st.sampled_from(["float16", "bfloat16", "float32"]),
+       d=st.integers(1, 12), K=st.integers(1, 4), C=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_codec_roundtrip_property(cov, dtype, d, K, C, seed):
+    """Property: for ANY family × precision × shape, encode→decode
+    preserves shapes, stays within the dtype's tolerance, re-encodes
+    byte-identically, and comm_bytes == len(payload) == Eqs. 9-11."""
+    _check_codec_roundtrip(cov, dtype, d, K, C, seed)

@@ -1,0 +1,20 @@
+"""Tier-1 entry point for the multidevice lane: spawn tests/multidevice in
+a subprocess with 8 simulated host devices (tests/_spawn.py) and require
+real passes — a silently-skipped lane is a failure, not a pass."""
+import re
+
+import pytest
+
+import _spawn
+
+
+@pytest.mark.slow
+def test_multidevice_lane_passes():
+    r = _spawn.run_multidevice_lane()
+    tail = (r.stdout or "")[-4000:] + "\n--- stderr ---\n" + \
+        (r.stderr or "")[-2000:]
+    assert r.returncode == 0, tail
+    m = re.search(r"(\d+) passed", r.stdout)
+    assert m and int(m.group(1)) >= 6, f"lane did not run its tests:\n{tail}"
+    assert not re.search(r"\d+ skipped", r.stdout), \
+        f"lane skipped tests despite the forced device count:\n{tail}"
