@@ -26,6 +26,19 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
+def write_json(path: str):
+    """Dump every emitted row as ``{name: us_per_call}`` JSON — the
+    machine-readable perf trajectory (``benchmarks.run --json``)."""
+    import json
+    data = {}
+    for row in ROWS:
+        name, us, _ = row.split(",", 2)
+        data[name] = float(us)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def timed(fn: Callable, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)

@@ -1,8 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                            [--json BENCH_<n>.json]
 
-Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
+``--json PATH`` additionally writes the rows as ``{name: us_per_call}``
+JSON so the perf trajectory is machine-readable across PRs.
 
   frontier          Fig. 4 / Table 5  comm-accuracy frontier, 20 clients
   shifts            Table 2           label/covariate/task extreme shifts
@@ -17,6 +20,9 @@ Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
                                       plus the skewed-cohort (1→4096
                                       counts) planner-vs-monolithic A/B
   em_bench          ISSUE 2           fused batched vs reference E-step
+  head_bench        ISSUE 5           fused sampler-in-the-loop head vs
+                                      planned+streamed vs pooled on the
+                                      skewed cohort
   roofline_report   deliverable (g)   dry-run roofline table
 """
 from __future__ import annotations
@@ -30,7 +36,7 @@ from benchmarks import common as C
 
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
-           "em_bench", "frontier", "roofline_report"]
+           "em_bench", "head_bench", "frontier", "roofline_report"]
 
 
 def main(argv=None) -> None:
@@ -39,6 +45,10 @@ def main(argv=None) -> None:
                     help="reduced grids for CI")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as {name: us_per_call} JSON "
+                         "(e.g. BENCH_5.json) for the machine-readable "
+                         "perf trajectory")
     args = ap.parse_args(argv)
     mods = args.only.split(",") if args.only else MODULES
 
@@ -54,6 +64,8 @@ def main(argv=None) -> None:
             traceback.print_exc()
             failures.append(name)
             C.emit(f"{name}/__total__", (time.time() - t0) * 1e6, "FAILED")
+    if args.json:
+        C.write_json(args.json)
     if failures:
         sys.exit(f"benchmark failures: {failures}")
 

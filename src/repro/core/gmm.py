@@ -313,7 +313,89 @@ def fit_classwise_gmms(key, feats: jax.Array, labels: jax.Array,
 
 # ---------------------------------------------------------------------------
 # sampling  (server side — Algorithm 1, line 14)
+#
+# THE per-slot sampler primitives: every path that draws synthetic features
+# from mixture parameters — the bucketed `fl.api._sample_stacked` dispatch,
+# the fused sampler-in-the-loop head trainer
+# (`core.head.train_head_from_gmms`), and the single-mixture `sample` —
+# composes `sampling_factor` + `colored_noise` (and, for the fused scan,
+# `draw_slots` / `sample_slot_minibatch`), so the Gaussian transform cannot
+# drift between the materializing and the zero-materialization server paths.
 # ---------------------------------------------------------------------------
+
+
+def sampling_factor(cov, cov_type: str) -> jax.Array:
+    """Per-component Gaussian sampling factor F with F·Fᵀ = Proj_PSD(Σ).
+
+    Wire precision (or the DP mechanism) can leave Σ slightly non-PSD; the
+    clamped eigh factor U·√λ₊ for ``full`` samples N(0, Proj_PSD(Σ))
+    exactly and never NaNs, unlike a Cholesky.  diag/spher clamp at 0.
+    Shapes: full (…, K, d, d) → (…, K, d, d); diag (…, K, d) and spher
+    (…, K) stay elementwise √.
+    """
+    cf = cov.astype(jnp.float32)
+    if cov_type == "full":
+        evals, evecs = jnp.linalg.eigh(cf)
+        return evecs * jnp.sqrt(jnp.maximum(evals, 0.0))[..., None, :]
+    return jnp.sqrt(jnp.maximum(cf, 0.0))
+
+
+def colored_noise(fac, eps, cov_type: str) -> jax.Array:
+    """Standard-normal ``eps (…, d)`` → draw with covariance ``fac·facᵀ``.
+
+    ``fac`` is :func:`sampling_factor` output already gathered to eps's
+    batch shape: full (…, d, d), diag (…, d), spher (…,).
+    """
+    if cov_type == "full":
+        return jnp.einsum("...de,...e->...d", fac, eps)
+    if cov_type == "diag":
+        return fac * eps
+    return fac[..., None] * eps
+
+
+def draw_slots(key, cum_mass: jax.Array, n: int) -> jax.Array:
+    """Categorical over mixture slots ∝ counts, via the planner's
+    precomputed cumulative-mass table (``fl.planner.SlotTable.cum_mass``,
+    ascending with last entry 1): one uniform draw + binary search per
+    sample — O(n·log G) inside the fused training scan instead of an
+    O(n·G) categorical."""
+    u = jax.random.uniform(key, (n,))
+    return jnp.clip(jnp.searchsorted(cum_mass, u, side="right"),
+                    0, cum_mass.shape[0] - 1)
+
+
+def slot_gaussian(slot, comp, eps, mu, fac, cov_type: str) -> jax.Array:
+    """``mu[slot, comp] + F[slot, comp]·eps`` for any leading batch shape.
+
+    ``slot``/``comp`` index a flat (G, K, …) stack; ``eps (…, d)`` is
+    standard normal; ``fac`` is :func:`sampling_factor` output.  The
+    Gaussian half of the per-slot sampler, shared by the fused head
+    trainer's windowed draw and :func:`sample_slot_minibatch`.
+    """
+    return mu[slot, comp].astype(jnp.float32) \
+        + colored_noise(fac[slot, comp], eps, cov_type)
+
+
+def sample_slot_minibatch(key, cum_mass, pi, mu, fac, slot_labels,
+                          n: int, cov_type: str
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """One synthetic minibatch straight from a flat (G, K, …) slot stack.
+
+    The reference law of the fused sampler-in-the-loop head trainer
+    (``core.head.train_head_from_gmms``): slot ∝ counts via ``cum_mass``
+    (:func:`draw_slots`), component from ``pi``, Gaussian draw through the
+    precomputed ``fac`` (:func:`sampling_factor` / :func:`slot_gaussian`).
+    Returns ``(x (n, d), y (n,))`` — no pooled tensor ever exists.  (The
+    fused trainer itself hoists and windows the same three draws for RNG
+    throughput — equal in law, not bitwise.)
+    """
+    ks, kc, kn = jax.random.split(key, 3)
+    slot = draw_slots(ks, cum_mass, n)                        # (n,)
+    logits = jnp.log(jnp.clip(pi[slot].astype(jnp.float32), 1e-20))
+    comp = jax.random.categorical(kc, logits, axis=-1)        # (n,)
+    eps = jax.random.normal(kn, (n, mu.shape[-1]), jnp.float32)
+    return (slot_gaussian(slot, comp, eps, mu, fac, cov_type),
+            slot_labels[slot])
 
 
 def sample(key, gmm: Dict, n: int, cov_type: str) -> jax.Array:
@@ -323,13 +405,8 @@ def sample(key, gmm: Dict, n: int, cov_type: str) -> jax.Array:
     comp = jax.random.categorical(kc, jnp.log(pi), shape=(n,))
     mu = gmm["mu"].astype(jnp.float32)[comp]                  # (n,d)
     eps = jax.random.normal(kn, mu.shape, jnp.float32)
-    cov = gmm["cov"].astype(jnp.float32)
-    if cov_type == "full":
-        chol = jnp.linalg.cholesky(cov)[comp]                 # (n,d,d)
-        return mu + jnp.einsum("nde,ne->nd", chol, eps)
-    if cov_type == "diag":
-        return mu + eps * jnp.sqrt(cov[comp])
-    return mu + eps * jnp.sqrt(cov[comp])[:, None]
+    fac = sampling_factor(gmm["cov"], cov_type)
+    return mu + colored_noise(fac[comp], eps, cov_type)
 
 
 # ---------------------------------------------------------------------------

@@ -3,9 +3,18 @@
 The paper trains h with Adam + cross-entropy on either real features
 (Centralized oracle) or GMM-sampled synthetic features (FedPFT). One jitted
 ``lax.scan`` runs the whole optimization — no python step loop.
-:func:`train_head_streaming` is the chunked variant for the planner's
-bucketed synthesis (fl/planner): it consumes a list of (feats, labels)
-chunks without ever concatenating them.
+
+Three ways to feed it synthetic features (DESIGN.md §2):
+
+* :func:`train_head` — a materialized (N, d) pool;
+* :func:`train_head_streaming` — the planner's per-bucket chunks, never
+  concatenated: steps are grouped by their assigned chunk and each group
+  runs as ONE jitted scan, so the dispatch count is bounded by the number
+  of chunks, not ``n_steps``;
+* :func:`train_head_from_gmms` — the zero-materialization path: every Adam
+  step draws its minibatch from the decoded mixture-slot stack *inside*
+  one fused scan (``gmm.sample_slot_minibatch``); no pooled tensor and no
+  per-step host dispatch ever exist.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
+from repro.core import gmm as G
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +36,9 @@ class HeadConfig:
     batch_size: int = 256
     lr: float = 1e-3          # paper: Adam 1e-4; higher works for linear head
     weight_decay: float = 0.0
+    noise_window: int = 32    # fused path only: Gaussian noise is drawn in
+    #   (window, batch, d) blocks inside the scan — big-batch RNG
+    #   throughput, peak memory O(window·batch·d) on top of the slot stack
 
 
 def init_head(key, d: int, n_classes: int) -> Dict:
@@ -59,19 +72,24 @@ def train_head(key, feats: jax.Array, labels: jax.Array, n_classes: int,
     if N == 0:
         return (init_head(jax.random.split(key)[0], d, n_classes),
                 jnp.zeros((0,), jnp.float32))
-    if weights is None:
-        weights = jnp.ones((N,), jnp.float32)
+    uniform = weights is None
     feats = feats.astype(jnp.float32)
     k_init, k_steps = jax.random.split(key)
     params = init_head(k_init, d, n_classes)
     opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
     opt_state = opt.init(params)
     bs = min(cfg.batch_size, N)
-    p_sample = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+    if not uniform:
+        p_sample = weights / jnp.maximum(jnp.sum(weights), 1e-9)
 
     def step(carry, k):
         params, opt_state = carry
-        idx = jax.random.choice(k, N, (bs,), p=p_sample, replace=True)
+        if uniform:
+            # a categorical over a uniform p is an O(N)-per-step waste
+            # inside the scan — a plain randint draws the same law
+            idx = jax.random.randint(k, (bs,), 0, N)
+        else:
+            idx = jax.random.choice(k, N, (bs,), p=p_sample, replace=True)
         loss, grads = jax.value_and_grad(_xent)(
             params, feats[idx], labels[idx], jnp.ones((bs,), jnp.float32))
         updates, opt_state = opt.update(grads, opt_state, params)
@@ -83,16 +101,37 @@ def train_head(key, feats: jax.Array, labels: jax.Array, n_classes: int,
     return params, losses
 
 
-@partial(jax.jit, static_argnames=("cfg", "bs"))
-def _streaming_step(key, params, opt_state, feats, labels, cfg: HeadConfig,
-                    bs: int):
-    """One Adam step on a uniform minibatch drawn from ONE chunk."""
-    idx = jax.random.choice(key, feats.shape[0], (bs,), replace=True)
-    loss, grads = jax.value_and_grad(_xent)(
-        params, feats[idx], labels[idx], jnp.ones((bs,), jnp.float32))
+# round-robin passes over the chunk list in train_head_streaming: bounds
+# the gap between two visits to the same chunk by ≈ n_steps/_INTERLEAVE
+# while keeping the dispatch count O(chunks)
+_INTERLEAVE = 4
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _streaming_scan(keys, params, opt_state, feats, labels,
+                    cfg: HeadConfig):
+    """ALL the steps assigned to one chunk, as ONE jitted ``lax.scan``.
+
+    Minibatches are padded to ``cfg.batch_size`` with weight-0 rows (a
+    1-row chunk draws a full-width batch whose tail is masked), so the
+    compile key is the chunk shape alone — never a per-(shape, bs) pair.
+    """
+    bs = cfg.batch_size
+    n_rows = feats.shape[0]
+    w = (jnp.arange(bs) < min(bs, n_rows)).astype(jnp.float32)
     opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
-    updates, opt_state = opt.update(grads, opt_state, params)
-    return optim.apply_updates(params, updates), opt_state, loss
+
+    def step(carry, k):
+        params, opt_state = carry
+        idx = jax.random.randint(k, (bs,), 0, n_rows)
+        loss, grads = jax.value_and_grad(_xent)(
+            params, feats[idx], labels[idx], w)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return (optim.apply_updates(params, updates), opt_state), loss
+
+    (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
+                                               keys)
+    return params, opt_state, losses
 
 
 def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
@@ -100,14 +139,26 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
                          chunk_sharding=None) -> Tuple[Dict, jax.Array]:
     """Train a linear head over (feats, labels) chunks WITHOUT pooling them.
 
-    Each step picks a chunk with probability ∝ its row count and draws its
-    minibatch uniformly within it — so the per-step minibatch distribution
-    is exactly :func:`train_head`'s uniform sampling over the concatenated
-    pool, but the chunks are never concatenated: the planner's bucketed
-    synthesis (fl/planner) can hand over its per-bucket outputs and peak
-    memory stays O(largest chunk) on top of the resident chunk list.
-    One jitted step per distinct chunk shape; optimizer state carries
-    across chunks.
+    Steps are allocated to chunks ∝ row count (largest-remainder rounding
+    of ``n_steps·size/Σsize``) and each minibatch is drawn uniformly
+    within its chunk — the same expected minibatch law as
+    :func:`train_head`'s uniform sampling over the concatenated pool, but
+    the chunks are never concatenated: the planner's bucketed synthesis
+    (fl/planner) can hand over its per-bucket outputs and peak memory
+    stays O(largest chunk) on top of the resident chunk list.  Each
+    chunk's allocation is split into ``_INTERLEAVE`` segments scheduled
+    round-robin over the chunks — no chunk's steps all run last, so a
+    class concentrated in one small chunk is revisited every
+    ``≈ n_steps/_INTERLEAVE`` steps instead of being overwritten by
+    whichever chunk happens to train last — and every segment runs as ONE
+    jitted scan (:func:`_streaming_scan`).  The device dispatch count is
+    therefore ≤ ``_INTERLEAVE ·`` the number of chunks — not
+    ``cfg.n_steps`` as in the pre-fusion host loop — and, because the
+    allocation is deterministic in the chunk sizes, the compile count is
+    bounded by the distinct (chunk shape, segment length) pairs
+    (minibatches are padded to ``batch_size`` with weight-0 rows, so a
+    1-row chunk never triggers its own compile).  Optimizer state carries
+    across segments; the loss trace is returned in execution order.
 
     Returns (head params, per-step loss trace), matching ``train_head``'s
     contract — including the N=0 guard: a chunk list with zero total rows
@@ -118,7 +169,7 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     DESIGN.md §5) passes the replicated layout so the per-chunk jits see
     one placement regardless of what the data-parallel sampling left
     behind — without it, each (shape, sharding) pair would compile its own
-    step.
+    scan.
     """
     if not chunks:
         raise ValueError("train_head_streaming needs at least one chunk "
@@ -138,7 +189,7 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     if chunk_sharding is not None:
         chunks = [(jax.device_put(f, chunk_sharding),
                    jax.device_put(y, chunk_sharding)) for f, y in chunks]
-    k_init, k_assign, k_steps = jax.random.split(key, 3)
+    k_init, _, k_steps = jax.random.split(key, 3)
     if not chunks:
         return (init_head(k_init, d, n_classes),
                 jnp.zeros((0,), jnp.float32))
@@ -146,18 +197,132 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     params = init_head(k_init, d, n_classes)
     opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
     opt_state = opt.init(params)
-    assign = np.asarray(jax.device_get(jax.random.choice(
-        k_assign, len(chunks), (cfg.n_steps,),
-        p=jnp.asarray(sizes / sizes.sum()))))
+    # deterministic ∝-size step allocation (largest-remainder): stable
+    # across calls, so the per-(shape, length) scans compile once per
+    # cohort layout instead of once per RNG draw
+    raw = sizes / sizes.sum() * cfg.n_steps
+    n_per = np.floor(raw).astype(np.int64)
+    short = cfg.n_steps - int(n_per.sum())
+    if short:
+        n_per[np.argsort(-(raw - np.floor(raw)))[:short]] += 1
     keys = jax.random.split(k_steps, cfg.n_steps)
+    offsets = np.concatenate([[0], np.cumsum(n_per)])
     losses = []
-    for t in range(cfg.n_steps):
-        f, y = chunks[int(assign[t])]
-        bs = min(cfg.batch_size, int(f.shape[0]))
-        params, opt_state, loss = _streaming_step(keys[t], params, opt_state,
-                                                  f, y, cfg, bs)
-        losses.append(loss)
-    return params, jnp.stack(losses)
+    for r in range(_INTERLEAVE):
+        for j, (f, y) in enumerate(chunks):
+            # segment r of chunk j: its keys are the r-th slice of the
+            # chunk's contiguous key block (splitting points deterministic)
+            lo = int(offsets[j]) + int(n_per[j] * r // _INTERLEAVE)
+            hi = int(offsets[j]) + int(n_per[j] * (r + 1) // _INTERLEAVE)
+            if hi == lo:
+                continue
+            params, opt_state, loss = _streaming_scan(
+                keys[lo:hi], params, opt_state, f, y, cfg)
+            losses.append(loss)
+    if not losses:
+        return params, jnp.zeros((0,), jnp.float32)
+    return params, jnp.concatenate(losses)
+
+
+@partial(jax.jit, static_argnames=("n_classes", "cfg", "cov_type"))
+def _fused_gmm_scan(key, pi, mu, cov, slot_labels, counts, n_classes: int,
+                    cfg: HeadConfig, cov_type: str):
+    """The whole server phase as ONE device program.
+
+    Same minibatch law as ``gmm.sample_slot_minibatch`` per step (slot ∝
+    counts, component ∝ pi, Gaussian through the precomputed factor), but
+    regrouped for RNG throughput: the cheap integer draws (slot, component)
+    for ALL steps are two vectorized calls up front — O(n_steps·batch)
+    int32, negligible next to the slot stack — and the expensive Gaussian
+    block is drawn ``cfg.noise_window`` steps at a time inside the scan,
+    so the bit generator runs at big-batch throughput instead of one
+    (batch, d) call per step.  Peak memory: O(window·batch·d + slot
+    stack); the pooled (N, d) tensor never exists.
+    """
+    bs, d = cfg.batch_size, mu.shape[-1]
+    W = max(1, min(cfg.noise_window, cfg.n_steps))
+    n_win, tail = divmod(cfg.n_steps, W)
+    fac = G.sampling_factor(cov, cov_type)                    # (G, K, …)
+    mass = counts.astype(jnp.float32)
+    cum_mass = jnp.cumsum(mass) / jnp.maximum(jnp.sum(mass), 1e-9)
+    k_init, k_slot, k_comp, k_eps = jax.random.split(key, 4)
+    slot_all = G.draw_slots(k_slot, cum_mass, cfg.n_steps * bs)
+    logits = jnp.log(jnp.clip(pi.astype(jnp.float32), 1e-20))
+    comp_all = jax.random.categorical(k_comp, logits[slot_all], axis=-1)
+    params = init_head(k_init, d, n_classes)
+    opt = optim.adam(cfg.lr, weight_decay=cfg.weight_decay)
+    opt_state = opt.init(params)
+    ones = jnp.ones((bs,), jnp.float32)
+
+    def adam_step(carry, xy):
+        params, opt_state = carry
+        x, y = xy
+        loss, grads = jax.value_and_grad(_xent)(params, x, y, ones)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return (optim.apply_updates(params, updates), opt_state), loss
+
+    def window(carry, xs):
+        sl, cm, k = xs                                        # (W', bs) ×2
+        eps = jax.random.normal(k, sl.shape + (d,), jnp.float32)
+        x = G.slot_gaussian(sl, cm, eps, mu, fac, cov_type)   # (W', bs, d)
+        return jax.lax.scan(adam_step, carry, (x, slot_labels[sl]))
+
+    carry = (params, opt_state)
+    losses = []
+    if n_win:
+        n = n_win * W * bs
+        carry, main = jax.lax.scan(
+            window, carry, (slot_all[:n].reshape(n_win, W, bs),
+                            comp_all[:n].reshape(n_win, W, bs),
+                            jax.random.split(k_eps, n_win)))
+        losses.append(main.reshape(-1))
+    if tail:
+        carry, rest = window(carry, (slot_all[-tail * bs:].reshape(tail, bs),
+                                     comp_all[-tail * bs:].reshape(tail, bs),
+                                     jax.random.fold_in(k_eps, n_win)))
+        losses.append(rest)
+    params = carry[0]
+    if not losses:
+        return params, jnp.zeros((0,), jnp.float32)
+    return params, jnp.concatenate(losses) if len(losses) > 1 else losses[0]
+
+
+def train_head_from_gmms(key, pi: jax.Array, mu: jax.Array, cov: jax.Array,
+                         slot_labels: jax.Array, counts: jax.Array,
+                         n_classes: int, cfg: HeadConfig,
+                         cov_type: str) -> Tuple[Dict, jax.Array]:
+    """Zero-materialization server phase: train the head STRAIGHT from the
+    decoded mixture-slot stack — the synthetic pool never exists.
+
+    Inputs are the flat planned-slot stack (``fl.planner.SlotTable`` order,
+    ascending global slot id): ``pi (G, K)``, ``mu (G, K, d)``, ``cov``
+    ``(G, K, …)`` per the covariance family, ``slot_labels (G,)`` the class
+    of each slot, ``counts (G,)`` its requested draw count.  One jitted
+    program runs the whole optimization; every Adam step draws its
+    minibatch inside the scan — slot ∝ counts via the cumulative-mass
+    table, component from ``pi``, Gaussian draw through the precomputed
+    sampling factor (the ``gmm.sample_slot_minibatch`` law, windowed by
+    ``cfg.noise_window`` for RNG throughput).  Peak memory is
+    O(window·batch·d + slot stack) instead of O(Σcounts·d), and the
+    ``cfg.n_steps`` host dispatches of the streamed path collapse to one
+    device program.  In expectation each step's minibatch follows exactly
+    the law of uniform sampling from the pooled ``synthesize_chunks``
+    output — equivalence is tested distributionally (tests/test_fused_head).
+
+    Returns (head params, per-step loss trace), matching
+    :func:`train_head`'s contract — an empty slot table (or all-zero
+    counts) returns the freshly-initialized head and an empty loss trace.
+    """
+    G_slots = int(np.shape(mu)[0])
+    total = float(np.asarray(jax.device_get(jnp.sum(
+        jnp.asarray(counts).astype(jnp.float32)))))
+    d = int(np.shape(mu)[-1])
+    if G_slots == 0 or total <= 0.0:
+        return (init_head(jax.random.split(key)[0], d, n_classes),
+                jnp.zeros((0,), jnp.float32))
+    return _fused_gmm_scan(key, jnp.asarray(pi), jnp.asarray(mu),
+                           jnp.asarray(cov), jnp.asarray(slot_labels),
+                           jnp.asarray(counts), n_classes, cfg, cov_type)
 
 
 def accuracy(params: Dict, feats: jax.Array, labels: jax.Array,

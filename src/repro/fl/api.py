@@ -14,15 +14,21 @@ orthogonal pieces composed by a :class:`FedSession`:
     privacy      an optional DP hook applied to the summary *before* encoding
                  (Theorem 4.1's Gaussian mechanism)
 
-Server-side synthesis is planned: the count-stratified planner
-(:mod:`repro.fl.planner`) groups the flat ``(M·C)`` mixture slots into
-power-of-two count buckets and issues one jitted sample per bucket at that
-bucket's padded size — ≤ 2·Σcounts total draws under any skew — with
-sampling keys folded deterministically per *global* (client, class) slot:
-no two slots ever share a key, whatever the bucketing.  (The realized
-values still depend on the bucket's padded S — policies are equal in
-distribution, not bitwise.)  Bucket chunks can stream
-straight into ``core.head.train_head_streaming`` without pooling.
+Server-side synthesis never needs the pool (DESIGN.md §2): by default
+(``FedSession(synthesis="fused")``) the head trains STRAIGHT from the
+decoded mixture-slot stack — every Adam step draws its minibatch inside
+one jitted scan (``core.head.train_head_from_gmms``), keyed on the
+planner's flat slot table, so the pooled ``(N, d)`` tensor never exists.
+The materializing paths are kept for the A/B, DP-audit, and
+reconstruction benches: ``synthesis="streamed"`` runs the count-stratified
+planner (:mod:`repro.fl.planner`) — one jitted sample per power-of-two
+count bucket, ≤ 2·Σcounts total draws under any skew, chunks streamed
+into ``core.head.train_head_streaming`` — and ``synthesis="pooled"``
+concatenates the chunks for callers that need the synthetic set
+materialized.  Bucketed sampling keys fold deterministically per *global*
+(client, class) slot: no two slots ever share a key, whatever the
+bucketing (realized values still depend on the bucket's padded S —
+policies are equal in distribution, not bitwise).
 
 Mesh execution (DESIGN.md §5): ``FedSession(mesh=…)`` or ``shards=n``
 routes the round through :meth:`FedSession.run_sharded` — client fits as
@@ -53,10 +59,14 @@ from repro.fl import planner as P
 __all__ = [
     "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
     "HeadSummarizer", "Star", "Chain", "Ring", "FedSession", "SessionResult",
-    "encode_message", "stack_messages", "messages_from_wire",
-    "synthesize_batched", "synthesize_chunks", "synthesize_group_chunks",
-    "synthesize_looped",
+    "SYNTHESIS_MODES", "encode_message", "stack_messages",
+    "messages_from_wire", "fused_slot_stack", "synthesize_batched",
+    "synthesize_chunks", "synthesize_group_chunks", "synthesize_looped",
 ]
+
+# server synthesis policies (DESIGN.md §2): when the pool materializes and
+# when it never does
+SYNTHESIS_MODES = ("fused", "streamed", "pooled")
 
 # ---------------------------------------------------------------------------
 # wire codec
@@ -314,26 +324,20 @@ def _sample_stacked(key, slot_ids, pi, mu, cov, S: int,
     """
     d = mu.shape[-1]
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slot_ids)
+    # ONE sampler primitive (gmm.sampling_factor / colored_noise) shared
+    # with the fused in-scan path — the Gaussian transform cannot drift
+    # between the materializing and zero-materialization server phases
+    fac = G.sampling_factor(cov, cov_type)                     # (G, K, …)
 
-    def one(k, p, m, c):
+    def one(k, p, m, f):
         kc, kn = jax.random.split(k)
         logits = jnp.log(jnp.clip(p.astype(jnp.float32), 1e-20))
         comp = jax.random.categorical(kc, logits, shape=(S,))
-        mm = m.astype(jnp.float32)[comp]                       # (S, d)
         eps = jax.random.normal(kn, (S, d), jnp.float32)
-        cf = c.astype(jnp.float32)
-        if cov_type == "full":
-            # wire precision (or the DP mechanism) can leave Σ slightly
-            # non-PSD; a clamped eigh factor U·√λ₊ samples N(0, Proj_PSD(Σ))
-            # exactly and never NaNs, unlike a Cholesky
-            evals, evecs = jnp.linalg.eigh(cf)                 # (K,d),(K,d,d)
-            fac = evecs * jnp.sqrt(jnp.maximum(evals, 0.0))[..., None, :]
-            return mm + jnp.einsum("sde,se->sd", fac[comp], eps)
-        if cov_type == "diag":
-            return mm + eps * jnp.sqrt(jnp.maximum(cf[comp], 0.0))
-        return mm + eps * jnp.sqrt(jnp.maximum(cf[comp], 0.0))[:, None]
+        return m.astype(jnp.float32)[comp] + G.colored_noise(
+            f[comp], eps, cov_type)
 
-    return jax.vmap(one)(keys, pi, mu, cov)
+    return jax.vmap(one)(keys, pi, mu, fac)
 
 
 def _shard_bucket(mesh, slots, arrays):
@@ -359,6 +363,34 @@ def _shard_bucket(mesh, slots, arrays):
     put = lambda a: jax.device_put(grow(a), jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data")))
     return put(slots), tuple(put(a) for a in arrays)
+
+
+def fused_slot_stack(batch: Dict[str, jax.Array], counts,
+                     samples_per_class: Optional[int] = None):
+    """Gather the planner's :class:`~repro.fl.planner.SlotTable` rows from
+    a stacked ``(M, C, K, …)`` GMM batch → the flat ``(G, K, …)`` slot
+    stack the fused head trainer consumes.
+
+    THE construction of the zero-materialization server phase's input —
+    ``FedSession`` (via :meth:`FedSession._fused_slot_stack`), the
+    ``head_bench`` A/B, and the equivalence tests all build it here, so
+    the layout (ascending global slot ids, labels = slot % C) cannot
+    drift between them.  Returns ``(stack, slot_labels, slot_counts,
+    plan)`` ready for ``core.head.train_head_from_gmms``.
+    """
+    counts = np.asarray(jax.device_get(counts), np.int64)
+    if counts.ndim == 1:
+        counts = counts[None]
+        batch = jax.tree.map(lambda a: jnp.asarray(a)[None], batch)
+    M, C = counts.shape
+    plan = P.plan_synthesis(counts, samples_per_class)
+    table = plan.slot_table
+    flat = jax.tree.map(
+        lambda a: jnp.asarray(a).reshape((M * C,) + a.shape[2:]), batch)
+    slots = jnp.asarray(table.slots)
+    stack = {k: flat[k][slots] for k in _GMM_FIELDS}
+    labels = jnp.asarray((table.slots % C).astype(np.int32))
+    return stack, labels, jnp.asarray(table.counts), plan
 
 
 def synthesize_group_chunks(key, items,
@@ -670,9 +702,19 @@ class FedSession:
     aggregate: str = "synthesize"  # "synthesize" | "avg" | "ensemble" | "fedbe"
     client_summarizers: Optional[Tuple[Any, ...]] = None  # heterogeneous K/cov
     min_class_count: int = 0       # don't transmit classes below this count
-    stream_synthesis: bool = False  # train the head on per-bucket chunks
-    #   without pooling: server peak memory stays O(largest bucket) instead
-    #   of O(Σcounts · d) + the padded block (DESIGN.md §2)
+    # -- server synthesis policy (DESIGN.md §2) -----------------------------
+    #   "fused"    (default) zero-materialization: the head trains straight
+    #              from the mixture-slot stack, minibatches drawn inside ONE
+    #              jitted scan (head.train_head_from_gmms) — the pooled
+    #              (N, d) tensor never exists.  Heterogeneous cohorts
+    #              (mixed K / cov family, paper §6.3) can't stack into one
+    #              slot tensor and fall back to "pooled"
+    #              (info["synthesis_fallback"]).
+    #   "streamed" planner buckets are materialized as chunks and streamed
+    #              into train_head_streaming — peak O(largest bucket)
+    #   "pooled"   the pre-fusion path: synthesize everything, concat, train
+    synthesis: str = "fused"
+    stream_synthesis: bool = False  # deprecated alias for synthesis="streamed"
     # -- mesh execution mode (DESIGN.md §5) ---------------------------------
     mesh: Any = None               # jax Mesh with a "data" axis, or None
     shards: Optional[int] = None   # convenience: make_sim_mesh(shards)
@@ -758,6 +800,46 @@ class FedSession:
             key, [(m.params, m.counts, m.header.cov_type)
                   for m in messages], self.samples_per_class, mesh=mesh)
 
+    def _synthesis_mode(self) -> str:
+        if self.synthesis not in SYNTHESIS_MODES:
+            raise ValueError(
+                f"FedSession: unknown synthesis={self.synthesis!r} — choose "
+                f"one of {SYNTHESIS_MODES}")
+        if self.stream_synthesis:
+            if self.synthesis not in ("fused", "streamed"):
+                raise ValueError(
+                    f"FedSession: stream_synthesis=True (deprecated alias "
+                    f"for synthesis='streamed') contradicts "
+                    f"synthesis={self.synthesis!r} — drop one")
+            return "streamed"
+        return self.synthesis
+
+    def _fused_slot_stack(self, messages: Sequence[ClientMessage]):
+        """(slot stack, labels, counts, plan) for the fused path, or None
+        if the cohort is heterogeneous (mixed K / cov family, §6.3) and
+        can't stack into one (G, K, …) tensor."""
+        sigs = {(m.header.cov_type,)
+                + tuple(np.shape(m.params[f]) for f in _GMM_FIELDS)
+                for m in messages}
+        if len(sigs) > 1:
+            return None
+        return fused_slot_stack(stack_messages(messages),
+                                np.stack([m.counts for m in messages]),
+                                self.samples_per_class)
+
+    def _empty_cohort_result(self, k_head, info: Dict, messages
+                             ) -> SessionResult:
+        """min_class_count (or an all-empty cohort) filtered every class:
+        return a cleanly-initialized head instead of crashing train_head
+        on a 0-row pool."""
+        d = messages[0].header.d
+        info.update(synthetic_feats=jnp.zeros((0, d), jnp.float32),
+                    synthetic_labels=jnp.zeros((0,), jnp.int32),
+                    head_losses=jnp.zeros((0,), jnp.float32),
+                    empty_cohort=True)
+        return SessionResult(model=H.init_head(k_head, d, self.n_classes),
+                             info=info, messages=list(messages))
+
     def server_aggregate(self, key, messages: Sequence[ClientMessage],
                          mesh=None) -> SessionResult:
         if not messages:
@@ -766,29 +848,48 @@ class FedSession:
         info: Dict = {"comm_bytes": comm}
         kind = messages[0].header.kind
         if kind == "gmm":
+            mode = self._synthesis_mode()
             k_syn, k_head = jax.random.split(key)
+            fused = None
+            if mode == "fused":
+                fused = self._fused_slot_stack(messages)
+                if fused is None:
+                    # mixed-K/cov cohorts keep the materializing path
+                    mode = "pooled"
+                    info["synthesis_fallback"] = "heterogeneous cohort"
+            info["synthesis"] = mode
+            # head training runs replicated on every shard (same RNG, same
+            # steps) — pin its inputs to an explicit replicated layout so
+            # the jits see ONE sharding whatever the sampling left behind
+            # (DESIGN.md §5)
+            repl = None if mesh is None else jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            if mode == "fused":
+                stack, slot_labels, slot_counts, plan = fused
+                info["synthesis_plans"] = [plan]
+                if len(plan.slot_table) == 0:
+                    return self._empty_cohort_result(k_head, info, messages)
+                if repl is not None:
+                    # the fused scan runs replicated on the post-all_gather
+                    # stack: same inputs + same RNG ⇒ identical steps on
+                    # every shard (DESIGN.md §5)
+                    stack = {k: jax.device_put(v, repl)
+                             for k, v in stack.items()}
+                    slot_labels = jax.device_put(slot_labels, repl)
+                    slot_counts = jax.device_put(slot_counts, repl)
+                head_params, losses = H.train_head_from_gmms(
+                    k_head, stack["pi"], stack["mu"], stack["cov"],
+                    slot_labels, slot_counts, self.n_classes, self.head,
+                    messages[0].header.cov_type)
+                info.update(head_losses=losses)
+                return SessionResult(model=head_params, info=info,
+                                     messages=list(messages))
             chunks, plans = self._synthesize_all(k_syn, messages, mesh=mesh)
             info["synthesis_plans"] = plans
             n_syn = sum(int(f.shape[0]) for f, _ in chunks)
             if n_syn == 0:
-                # min_class_count (or an all-empty cohort) filtered every
-                # class: return a cleanly-initialized head instead of
-                # crashing train_head on a 0-row pool
-                d = messages[0].header.d
-                info.update(synthetic_feats=jnp.zeros((0, d), jnp.float32),
-                            synthetic_labels=jnp.zeros((0,), jnp.int32),
-                            head_losses=jnp.zeros((0,), jnp.float32),
-                            empty_cohort=True)
-                return SessionResult(model=H.init_head(k_head, d,
-                                                       self.n_classes),
-                                     info=info, messages=list(messages))
-            # head training runs replicated on every shard (same RNG, same
-            # steps) — pin the chunks to an explicit replicated layout so
-            # the per-chunk jits see ONE sharding whatever the sampling
-            # left behind (DESIGN.md §5)
-            repl = None if mesh is None else jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec())
-            if self.stream_synthesis:
+                return self._empty_cohort_result(k_head, info, messages)
+            if mode == "streamed":
                 head_params, losses = H.train_head_streaming(
                     k_head, chunks, self.n_classes, self.head,
                     chunk_sharding=repl)

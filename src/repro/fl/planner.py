@@ -26,7 +26,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Bucket", "SynthesisPlan", "plan_synthesis"]
+__all__ = ["Bucket", "SlotTable", "SynthesisPlan", "plan_synthesis"]
 
 POLICIES = ("pow2", "single")
 
@@ -49,6 +49,24 @@ class Bucket:
     @property
     def requested(self) -> int:
         return int(self.n_eff.sum())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SlotTable:
+    """Flat per-slot draw table over every planned (nonzero) slot.
+
+    Rows ascend by *global* slot id — bucket-independent — so the table is
+    identical under every bucketing policy.  This is what the fused
+    sampler-in-the-loop head trainer (``core.head.train_head_from_gmms``)
+    keys on: ``cum_mass`` feeds the in-scan slot categorical
+    (``gmm.draw_slots``) directly, no synthetic pool in between.
+    """
+    slots: np.ndarray      # (G,) global slot ids into the (M·C) stack
+    counts: np.ndarray     # (G,) requested draws per slot, all ≥ 1
+    cum_mass: np.ndarray   # (G,) f32 cumulative draw mass; last entry 1.0
+
+    def __len__(self) -> int:
+        return int(self.slots.shape[0])
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -88,6 +106,21 @@ class SynthesisPlan:
     @property
     def n_dispatches(self) -> int:
         return len(self.buckets)
+
+    @property
+    def slot_table(self) -> SlotTable:
+        """The plan's flat :class:`SlotTable` (global-slot-id order)."""
+        if not self.buckets:
+            z = np.zeros((0,), np.int64)
+            return SlotTable(slots=z, counts=z.copy(),
+                             cum_mass=np.zeros((0,), np.float32))
+        slots = np.concatenate([b.slots for b in self.buckets])
+        counts = np.concatenate([b.n_eff for b in self.buckets])
+        order = np.argsort(slots, kind="stable")
+        slots, counts = slots[order], counts[order]
+        cum = np.cumsum(counts.astype(np.float64))
+        return SlotTable(slots=slots, counts=counts,
+                         cum_mass=(cum / cum[-1]).astype(np.float32))
 
 
 def _bucket_ceiling(n: np.ndarray) -> np.ndarray:

@@ -132,6 +132,40 @@ def test_session_invariance_across_shard_counts(cohort):
         assert agree >= 0.98, f"{n}-shard head predicts differently: {agree}"
 
 
+def test_fused_head_invariance_across_shard_counts(cohort):
+    """The zero-materialization server phase (FedSession's default,
+    ``synthesis="fused"``) runs the fused sampler-in-the-loop scan
+    REPLICATED on the post-all_gather slot stack: same inputs + same RNG
+    on every shard ⇒ the trained head is shard-count invariant, with no
+    synthetic pool or chunk list ever materialized."""
+    feats, labels = cohort
+    results = {}
+    for n in SHARD_COUNTS:
+        sess = FA.FedSession(
+            n_classes=N_CLASSES, summarizer=FA.GMMSummarizer(_gmm_cfg()),
+            head=H.HeadConfig(n_steps=120, lr=3e-3), shards=n)
+        res = sess.run_sharded(jax.random.PRNGKey(0), feats, labels)
+        assert res.info["synthesis"] == "fused"
+        assert "synthetic_chunks" not in res.info
+        assert "synthetic_feats" not in res.info
+        assert res.info["head_losses"].shape == (120,)
+        assert_finite(res.model, f"in {n}-shard fused head")
+        results[n] = res
+    ref = results[1]
+    for n in SHARD_COUNTS[1:]:
+        res = results[n]
+        for p in ("w", "b"):
+            np.testing.assert_allclose(
+                np.asarray(ref.model[p]), np.asarray(res.model[p]),
+                rtol=1e-2, atol=2e-2,
+                err_msg=f"fused head {p!r} differs between 1-shard and "
+                        f"{n}-shard execution")
+        agree = np.mean(
+            np.argmax(np.asarray(H.head_logits(ref.model, feats[0])), -1)
+            == np.argmax(np.asarray(H.head_logits(res.model, feats[0])), -1))
+        assert agree >= 0.98, f"{n}-shard fused head predicts differently"
+
+
 def test_client_seeds_disjoint_end_to_end(cohort):
     """Give every client IDENTICAL data: with globally-disjoint per-client
     seeds each fit must still differ (k-means seeding draws), and each

@@ -265,7 +265,7 @@ class TestFedSessionPaths:
         x, y, xt, yt = dataset
         clients = [(x[y < 3], y[y < 3]),            # classes 3.. absent
                    (x[y >= 2], y[y >= 2])]          # classes 0-1 absent
-        sess = _gmm_session(cov=cov, K=2)
+        sess = _gmm_session(cov=cov, K=2, synthesis="pooled")
         keys = jax.random.split(key, 3)
         msgs = [sess.client_update(k, f, yy, i)
                 for i, (k, (f, yy)) in enumerate(zip(keys[1:], clients))]
@@ -281,6 +281,12 @@ class TestFedSessionPaths:
         # every class is represented by at least one client's synthesis
         assert set(np.unique(np.asarray(res.info["synthetic_labels"]))) \
             == set(range(N_CLASSES))
+        # the fused default never materializes the pool yet stays finite
+        res_f = _gmm_session(cov=cov, K=2).server_aggregate(keys[0], msgs)
+        assert res_f.info["synthesis"] == "fused"
+        assert "synthetic_feats" not in res_f.info
+        for leaf in jax.tree.leaves(res_f.model):
+            assert np.isfinite(np.asarray(leaf)).all()
 
     def test_dp_requires_star_topology(self, key, dataset):
         """Chain messages summarize a union that includes other clients'
