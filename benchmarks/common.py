@@ -18,22 +18,35 @@ from repro.core import head as H
 from repro.models import model as M
 
 ROWS: List[str] = []
+PEAK_BYTES: Dict[str, int] = {}   # name → peak resident bytes, when tracked
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def emit(name: str, us_per_call: float, derived: str,
+         peak_bytes: int = None):
+    """One benchmark row.  ``peak_bytes`` (memory-law benches: fl.ingest)
+    rides along into the ``--json`` record next to ``us_per_call``."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    if peak_bytes is not None:
+        PEAK_BYTES[name] = int(peak_bytes)
     print(row, flush=True)
 
 
 def write_json(path: str):
     """Dump every emitted row as ``{name: us_per_call}`` JSON — the
-    machine-readable perf trajectory (``benchmarks.run --json``)."""
+    machine-readable perf trajectory (``benchmarks.run --json``).  Rows
+    that tracked a memory peak become ``{name: {"us_per_call": …,
+    "peak_bytes": …}}`` objects; plain rows stay floats, so existing
+    trajectory tooling keeps parsing untouched benches."""
     import json
     data = {}
     for row in ROWS:
         name, us, _ = row.split(",", 2)
-        data[name] = float(us)
+        if name in PEAK_BYTES:
+            data[name] = {"us_per_call": float(us),
+                          "peak_bytes": PEAK_BYTES[name]}
+        else:
+            data[name] = float(us)
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -23,6 +23,9 @@ JSON so the perf trajectory is machine-readable across PRs.
   head_bench        ISSUE 5           fused sampler-in-the-loop head vs
                                       planned+streamed vs pooled on the
                                       skewed cohort
+  ingest_bench      ISSUE 6           100k-client streaming ingestion:
+                                      clients/sec folded + peak resident
+                                      bytes vs the stacked-cohort cost
   roofline_report   deliverable (g)   dry-run roofline table
 """
 from __future__ import annotations
@@ -36,7 +39,8 @@ from benchmarks import common as C
 
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
-           "em_bench", "head_bench", "frontier", "roofline_report"]
+           "em_bench", "head_bench", "ingest_bench", "frontier",
+           "roofline_report"]
 
 
 def main(argv=None) -> None:

@@ -52,7 +52,7 @@ def _eval_methods(key, src, dst, test, n_classes, tag, quick):
         cfg = C.default_fp_cfg(K=K)
         msgs, infos = DC.run_chain(ks[4], [(fs, ys), (fd, yd)], n_classes,
                                    cfg)
-        comm = msgs[0].wire_bytes(cfg.gmm.cov_type)
+        comm = msgs[0].comm_bytes   # v2 message: exact payload length
         C.emit(f"shifts/{tag}/fedpft_k{K}", 0,
                f"acc={C.accuracy(infos[-1]['head'], ft, yt):.4f};"
                f"comm={comm}")

@@ -46,7 +46,7 @@ def main():
             summarizer=FA.GMMSummarizer(
                 G.GMMConfig(n_components=3, cov_type="diag", n_iter=15)),
             head=H.HeadConfig(n_steps=300, lr=3e-3),
-            shards=shards, stream_synthesis=True)
+            shards=shards, synthesis="streamed")
 
     key = jax.random.PRNGKey(0)
     print(f"host devices: {jax.device_count()}")

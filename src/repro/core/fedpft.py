@@ -134,7 +134,10 @@ def server_aggregate(key, messages: Sequence[ClientMessage], n_classes: int,
     feats, labels = synthesize(k_syn, messages, cfg.gmm.cov_type)
     head_params, losses = H.train_head(k_head, feats, labels, n_classes,
                                        cfg.head)
-    comm = sum(m.wire_bytes(cfg.gmm.cov_type, cfg.bytes_per_scalar)
+    # v2 messages carry their real payload (comm_bytes); only the v1
+    # estimator still takes the (cov_type, bytes_per_scalar) cost model
+    comm = sum(m.comm_bytes if hasattr(m, "comm_bytes")
+               else m.wire_bytes(cfg.gmm.cov_type, cfg.bytes_per_scalar)
                for m in messages)
     info = {"synthetic_feats": feats, "synthetic_labels": labels,
             "head_losses": losses, "comm_bytes": comm}

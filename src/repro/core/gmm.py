@@ -398,6 +398,30 @@ def sample_slot_minibatch(key, cum_mass, pi, mu, fac, slot_labels,
             slot_labels[slot])
 
 
+def identity_gmm(K: int, d: int, cov_type: str) -> Dict[str, np.ndarray]:
+    """Inert placeholder mixture: uniform pi, zero means, unit covariance.
+
+    THE padding row for fixed-capacity slot stacks (``fl.ingest``): safe
+    under every sampler primitive (``sampling_factor``'s eigh/√ stays
+    finite, ``slot_gaussian`` draws N(0, I)), so a padded stack can flow
+    through ``head.train_head_from_gmms`` unconditionally.  Pad rows MUST
+    carry draw count 0 — the cumulative-mass categorical then never
+    selects them, and the trained head is bit-identical to the unpadded
+    stack (prefix pads add exact zeros to the f32 cumulative mass).
+    """
+    if cov_type == "full":
+        cov = np.tile(np.eye(d, dtype=np.float32)[None], (K, 1, 1))
+    elif cov_type == "diag":
+        cov = np.ones((K, d), np.float32)
+    elif cov_type == "spher":
+        cov = np.ones((K,), np.float32)
+    else:
+        raise ValueError(f"identity_gmm: unknown cov_type {cov_type!r} — "
+                         f"choose one of {COV_TYPES}")
+    return {"pi": np.full((K,), 1.0 / K, np.float32),
+            "mu": np.zeros((K, d), np.float32), "cov": cov}
+
+
 def sample(key, gmm: Dict, n: int, cov_type: str) -> jax.Array:
     """Draw n samples from the mixture: returns (n, d)."""
     kc, kn = jax.random.split(key)

@@ -312,8 +312,22 @@ def train_head_from_gmms(key, pi: jax.Array, mu: jax.Array, cov: jax.Array,
     Returns (head params, per-step loss trace), matching
     :func:`train_head`'s contract — an empty slot table (or all-zero
     counts) returns the freshly-initialized head and an empty loss trace.
+
+    Zero-count rows are legal anywhere in the stack: the in-scan
+    categorical draws ∝ counts, so they are never selected and only shape
+    the compile key.  The streaming reservoir (``fl.ingest``) exploits
+    this with a *prefix* of ``gmm.identity_gmm`` pad rows — leading zeros
+    are exact under the f32 cumulative mass and ``gmm.draw_slots``' clip
+    lands on the last real row, so the padded stack trains a head
+    bit-identical to the unpadded one at a fixed compile shape.
     """
     G_slots = int(np.shape(mu)[0])
+    if np.shape(slot_labels) != (G_slots,) or np.shape(counts) != (G_slots,):
+        raise ValueError(
+            f"train_head_from_gmms: slot stack has {G_slots} rows but "
+            f"slot_labels is {np.shape(slot_labels)} and counts is "
+            f"{np.shape(counts)} — pass one label and one draw count per "
+            "slot row (fl.planner.SlotTable order)")
     total = float(np.asarray(jax.device_get(jnp.sum(
         jnp.asarray(counts).astype(jnp.float32)))))
     d = int(np.shape(mu)[-1])

@@ -13,18 +13,20 @@ One-shot: AVG, Ensemble, FedBE, KD — routed through ``FedSession`` via
 payload length ((C·d + C)·bytes_per_scalar, §6.3); multi-round methods pay
 it up+down per round.
 """
-from repro.fl import api, planner
+from repro.fl import api, ingest, planner
 from repro.fl.api import (Chain, ClientMessage, FedSession, GMMSummarizer,
                           HeadSummarizer, QuantizedCodec, Ring, Star,
                           synthesize_batched, synthesize_chunks)
 from repro.fl.baselines import (MultiRoundConfig, avg_heads,
                                 ensemble_predict, fedavg, fedbe,
                                 head_comm_bytes, kd_transfer, local_train)
-from repro.fl.planner import SynthesisPlan, plan_synthesis
+from repro.fl.ingest import IngestBroker, IngestConfig, IngestState
+from repro.fl.planner import SlotTable, SynthesisPlan, plan_synthesis
 
 __all__ = ["MultiRoundConfig", "fedavg", "local_train", "avg_heads",
            "ensemble_predict", "fedbe", "kd_transfer", "head_comm_bytes",
-           "api", "planner", "FedSession", "GMMSummarizer", "HeadSummarizer",
-           "QuantizedCodec", "Star", "Chain", "Ring", "ClientMessage",
-           "synthesize_batched", "synthesize_chunks", "SynthesisPlan",
-           "plan_synthesis"]
+           "api", "ingest", "planner", "FedSession", "GMMSummarizer",
+           "HeadSummarizer", "QuantizedCodec", "Star", "Chain", "Ring",
+           "ClientMessage", "IngestBroker", "IngestConfig", "IngestState",
+           "synthesize_batched", "synthesize_chunks", "SlotTable",
+           "SynthesisPlan", "plan_synthesis"]

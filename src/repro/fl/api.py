@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +55,7 @@ from repro.core import distributed as DF
 from repro.core import dp as DP
 from repro.core import gmm as G
 from repro.core import head as H
+from repro.fl import ingest as IG
 from repro.fl import planner as P
 
 __all__ = [
@@ -209,8 +211,14 @@ class ClientMessage:
     def comm_bytes(self) -> int:
         return len(self.payload)
 
-    def wire_bytes(self, *_a, **_k) -> int:
-        """Drop-in for the v1 accessor: actual encoded payload length."""
+    def wire_bytes(self) -> int:
+        """Actual encoded payload length (``== comm_bytes``).
+
+        Unlike the v1 estimator this takes no arguments: the v2 message
+        carries its real payload, so there is nothing to parameterize —
+        callers migrating from v1 drop the ``(cov_type, bytes_per_scalar)``
+        arguments rather than have them silently swallowed.
+        """
         return len(self.payload)
 
 
@@ -715,6 +723,12 @@ class FedSession:
     #   "pooled"   the pre-fusion path: synthesize everything, concat, train
     synthesis: str = "fused"
     stream_synthesis: bool = False  # deprecated alias for synthesis="streamed"
+    # -- streaming ingestion (DESIGN.md §9) ---------------------------------
+    #   IngestConfig routes the server phase through fl.ingest: arriving
+    #   messages fold into a fixed-capacity reservoir chunk-at-a-time, so
+    #   peak server memory and the fused scan's compile key are independent
+    #   of the cohort size M.  Requires synthesis="fused".
+    ingest: Optional[IG.IngestConfig] = None
     # -- mesh execution mode (DESIGN.md §5) ---------------------------------
     mesh: Any = None               # jax Mesh with a "data" axis, or None
     shards: Optional[int] = None   # convenience: make_sim_mesh(shards)
@@ -811,6 +825,11 @@ class FedSession:
                     f"FedSession: stream_synthesis=True (deprecated alias "
                     f"for synthesis='streamed') contradicts "
                     f"synthesis={self.synthesis!r} — drop one")
+            warnings.warn(
+                "FedSession(stream_synthesis=True) is deprecated and will "
+                "be removed in a future release — pass "
+                "synthesis='streamed' instead",
+                DeprecationWarning, stacklevel=3)
             return "streamed"
         return self.synthesis
 
@@ -827,18 +846,76 @@ class FedSession:
                                 np.stack([m.counts for m in messages]),
                                 self.samples_per_class)
 
-    def _empty_cohort_result(self, k_head, info: Dict, messages
-                             ) -> SessionResult:
+    def _empty_cohort_result(self, k_head, info: Dict, messages,
+                             d: Optional[int] = None) -> SessionResult:
         """min_class_count (or an all-empty cohort) filtered every class:
         return a cleanly-initialized head instead of crashing train_head
-        on a 0-row pool."""
-        d = messages[0].header.d
+        on a 0-row pool.  ``d`` overrides the feature dim for callers that
+        discarded their messages (the streaming run loop)."""
+        if d is None:
+            d = messages[0].header.d
         info.update(synthetic_feats=jnp.zeros((0, d), jnp.float32),
                     synthetic_labels=jnp.zeros((0,), jnp.int32),
                     head_losses=jnp.zeros((0,), jnp.float32),
                     empty_cohort=True)
         return SessionResult(model=H.init_head(k_head, d, self.n_classes),
                              info=info, messages=list(messages))
+
+    def _check_ingest_mode(self) -> None:
+        if self._synthesis_mode() != "fused":
+            raise ValueError(
+                "FedSession(ingest=...): streaming ingestion trains the "
+                "head straight from the bounded slot reservoir — only "
+                "synthesis='fused' never materializes the cohort; drop "
+                "ingest= for the 'streamed'/'pooled' A/B paths")
+
+    def _train_from_state(self, k_head, state: "IG.IngestState",
+                          info: Dict, messages, mesh=None) -> SessionResult:
+        """Fused head training on the reservoir's fixed-shape padded stack
+        — the streaming counterpart of the ``mode == "fused"`` branch of
+        :meth:`server_aggregate`; compile key = capacity, not M."""
+        pi, mu, cov, slot_labels, slot_counts = state.padded_stack()
+        pi, mu, cov = jnp.asarray(pi), jnp.asarray(mu), jnp.asarray(cov)
+        slot_labels = jnp.asarray(slot_labels)
+        slot_counts = jnp.asarray(slot_counts)
+        if mesh is not None:
+            repl = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            pi, mu, cov = (jax.device_put(a, repl) for a in (pi, mu, cov))
+            slot_labels = jax.device_put(slot_labels, repl)
+            slot_counts = jax.device_put(slot_counts, repl)
+        head_params, losses = H.train_head_from_gmms(
+            k_head, pi, mu, cov, slot_labels, slot_counts,
+            self.n_classes, self.head, state.cov_type)
+        info.update(head_losses=losses)
+        return SessionResult(model=head_params, info=info,
+                             messages=list(messages))
+
+    def _ingest_aggregate(self, key, messages: Sequence[ClientMessage],
+                          info: Dict, mesh=None) -> SessionResult:
+        """Server phase through the streaming broker (DESIGN.md §9).
+
+        The message list stands in for the arrival stream — position is
+        the client id, matching the Star round's enumeration.  Admission,
+        byte accounting, and chunked folding all run exactly as in the
+        streaming loop, so this path (host or mesh) and
+        :meth:`_run_streaming` share one state machine.
+        """
+        self._check_ingest_mode()
+        broker = IG.IngestBroker(self.ingest, self.n_classes,
+                                 samples_per_class=self.samples_per_class)
+        for i, m in enumerate(messages):
+            broker.submit(i, m)
+        state = broker.close()
+        _, k_head = jax.random.split(key)   # mirrors the fused branch's
+        #   (k_syn, k_head) split — bit-identical head keys either way
+        info["synthesis"] = "fused"
+        info["ingest"] = broker.accounting()
+        if state is None or len(state.slot_table()) == 0:
+            return self._empty_cohort_result(k_head, info, messages,
+                                             d=broker.header_d)
+        return self._train_from_state(k_head, state, info, messages,
+                                      mesh=mesh)
 
     def server_aggregate(self, key, messages: Sequence[ClientMessage],
                          mesh=None) -> SessionResult:
@@ -847,6 +924,8 @@ class FedSession:
         comm = sum(m.comm_bytes for m in messages)
         info: Dict = {"comm_bytes": comm}
         kind = messages[0].header.kind
+        if kind == "gmm" and self.ingest is not None:
+            return self._ingest_aggregate(key, messages, info, mesh=mesh)
         if kind == "gmm":
             mode = self._synthesis_mode()
             k_syn, k_head = jax.random.split(key)
@@ -1020,6 +1099,52 @@ class FedSession:
                 self.n_classes, feats.shape[0]))
         return result
 
+    # -- streaming ingestion run (DESIGN.md §9) -----------------------------
+
+    def _run_streaming(self, key, client_datasets) -> SessionResult:
+        """The Star round with M as a streaming axis: each client's message
+        is produced, submitted to the broker, and DISCARDED — the full
+        message list never exists, so peak server memory is the broker's
+        law (fixed-capacity state + one pending chunk) regardless of M.
+
+        Key plumbing mirrors ``Star.run`` + ``server_aggregate`` exactly
+        (per-client ``keys[1:]``, server ``keys[0]``, the ``(k_syn,
+        k_head)`` split), so under capacity the returned head is
+        bit-identical to the non-streaming fused session's.
+        """
+        self._check_ingest_mode()
+        if not isinstance(self.topology, Star):
+            raise NotImplementedError(
+                f"FedSession(ingest=...): the broker receives one-shot "
+                f"Star messages; {self.topology.name!r} rounds are "
+                "sequential relays with no cohort to stream — drop ingest=")
+        if self.summarizer.kind != "gmm" or (
+                self.client_summarizers is not None and any(
+                    s.kind != "gmm" for s in self.client_summarizers)):
+            raise NotImplementedError(
+                "FedSession(ingest=...): streaming ingestion folds GMM "
+                "summaries; head-summary baselines aggregate via the "
+                "non-streaming path (aggregate=...)")
+        if not client_datasets:
+            raise ValueError("server_aggregate needs at least one message")
+        keys = jax.random.split(key, len(client_datasets) + 1)
+        broker = IG.IngestBroker(self.ingest, self.n_classes,
+                                 samples_per_class=self.samples_per_class)
+        comm = 0
+        for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets)):
+            msg = self.client_update(k, f, y, i)
+            comm += msg.comm_bytes
+            broker.submit(i, msg)
+            del msg
+        state = broker.close()
+        _, k_head = jax.random.split(keys[0])
+        info: Dict = {"comm_bytes": comm, "synthesis": "fused",
+                      "ingest": broker.accounting()}
+        if state is None or len(state.slot_table()) == 0:
+            return self._empty_cohort_result(k_head, info, [],
+                                             d=broker.header_d)
+        return self._train_from_state(k_head, state, info, messages=[])
+
     # -- entry point --------------------------------------------------------
 
     def run(self, key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]]
@@ -1037,4 +1162,6 @@ class FedSession:
             feats = jnp.stack([jnp.asarray(f) for f, _ in client_datasets])
             labels = jnp.stack([jnp.asarray(y) for _, y in client_datasets])
             return self.run_sharded(key, feats, labels)
+        if self.ingest is not None:
+            return self._run_streaming(key, client_datasets)
         return self.topology.run(key, self, client_datasets)

@@ -68,6 +68,60 @@ class SlotTable:
     def __len__(self) -> int:
         return int(self.slots.shape[0])
 
+    @classmethod
+    def empty(cls) -> "SlotTable":
+        """The merge identity: zero slots, zero mass."""
+        z = np.zeros((0,), np.int64)
+        return cls(slots=z, counts=z.copy(),
+                   cum_mass=np.zeros((0,), np.float32))
+
+    @classmethod
+    def from_slots(cls, slots, counts) -> "SlotTable":
+        """Build the canonical table from (slot id, draw count) pairs.
+
+        Canonical means ascending global slot id with the cumulative mass
+        recomputed from scratch — the same row a full-cohort
+        ``plan_synthesis(...).slot_table`` would produce, so any fold
+        order over chunks converges to the identical table.
+        """
+        slots = np.asarray(slots, np.int64).reshape(-1)
+        counts = np.asarray(counts, np.int64).reshape(-1)
+        if slots.shape != counts.shape:
+            raise ValueError(
+                f"SlotTable.from_slots: {slots.shape[0]} slot ids vs "
+                f"{counts.shape[0]} counts — pass one count per slot id")
+        if (counts <= 0).any():
+            raise ValueError("SlotTable.from_slots: counts must be ≥ 1 — "
+                             "drop zero-count slots before tabling them")
+        if np.unique(slots).size != slots.size:
+            raise ValueError("SlotTable.from_slots: duplicate slot ids — "
+                             "use SlotTable.merge to sum overlapping tables")
+        if slots.size == 0:
+            return cls.empty()
+        order = np.argsort(slots, kind="stable")
+        slots, counts = slots[order], counts[order]
+        cum = np.cumsum(counts.astype(np.float64))
+        return cls(slots=slots, counts=counts,
+                   cum_mass=(cum / cum[-1]).astype(np.float32))
+
+    def merge(self, other: "SlotTable") -> "SlotTable":
+        """Associative, commutative fold of two tables.
+
+        Shared slot ids sum their counts (the same slot observed in two
+        chunks), the union is re-canonicalized, so
+        ``merge(a, merge(b, c)) == merge(merge(a, b), c)`` bitwise and
+        ``SlotTable.empty()`` is the identity.
+        """
+        if len(self) == 0:
+            return SlotTable.from_slots(other.slots, other.counts)
+        if len(other) == 0:
+            return SlotTable.from_slots(self.slots, self.counts)
+        slots = np.concatenate([self.slots, other.slots])
+        counts = np.concatenate([self.counts, other.counts])
+        uniq, inv = np.unique(slots, return_inverse=True)
+        summed = np.bincount(inv, weights=counts.astype(np.float64))
+        return SlotTable.from_slots(uniq, summed.astype(np.int64))
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class SynthesisPlan:
@@ -111,16 +165,10 @@ class SynthesisPlan:
     def slot_table(self) -> SlotTable:
         """The plan's flat :class:`SlotTable` (global-slot-id order)."""
         if not self.buckets:
-            z = np.zeros((0,), np.int64)
-            return SlotTable(slots=z, counts=z.copy(),
-                             cum_mass=np.zeros((0,), np.float32))
-        slots = np.concatenate([b.slots for b in self.buckets])
-        counts = np.concatenate([b.n_eff for b in self.buckets])
-        order = np.argsort(slots, kind="stable")
-        slots, counts = slots[order], counts[order]
-        cum = np.cumsum(counts.astype(np.float64))
-        return SlotTable(slots=slots, counts=counts,
-                         cum_mass=(cum / cum[-1]).astype(np.float32))
+            return SlotTable.empty()
+        return SlotTable.from_slots(
+            np.concatenate([b.slots for b in self.buckets]),
+            np.concatenate([b.n_eff for b in self.buckets]))
 
 
 def _bucket_ceiling(n: np.ndarray) -> np.ndarray:

@@ -14,3 +14,17 @@ def assert_finite(tree, msg=""):
     for leaf in jax.tree.leaves(tree):
         assert bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32)))), \
             f"non-finite values {msg}"
+
+
+def assert_peak_bytes(peak, budget, msg=""):
+    """Peak resident bytes must not exceed ``budget``.
+
+    The streaming-ingestion memory law (DESIGN.md §9): peak server bytes
+    are a function of (capacity, chunk_size, message schema) only — pass
+    another run's peak as the budget to assert M-independence, or a
+    computed bound to assert the law itself.
+    """
+    peak, budget = int(peak), int(budget)
+    assert peak <= budget, \
+        f"peak resident bytes {peak} exceed budget {budget} " \
+        f"(+{peak - budget}) {msg}"

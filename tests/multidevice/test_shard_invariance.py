@@ -94,7 +94,7 @@ def test_session_invariance_across_shard_counts(cohort):
         sess = FA.FedSession(
             n_classes=N_CLASSES, summarizer=FA.GMMSummarizer(_gmm_cfg()),
             head=H.HeadConfig(n_steps=120, lr=3e-3), shards=n,
-            stream_synthesis=True)
+            synthesis="streamed")
         res = sess.run_sharded(jax.random.PRNGKey(0), feats, labels)
         assert res.info["n_shards"] == n
         assert res.info["comm_bytes"] == \

@@ -342,7 +342,7 @@ class TestMeshMode:
         """The 1-shard mesh session reports comm_bytes == Σ len(payload)
         == Eqs. 9-11 — the mesh path and the codec share one layout."""
         feats, labels = self._cohort(dataset)
-        sess = _gmm_session(shards=1, stream_synthesis=True)
+        sess = _gmm_session(shards=1, synthesis="streamed")
         res = sess.run_sharded(key, feats, labels)
         assert res.info["n_shards"] == 1
         assert res.info["comm_bytes"] == \

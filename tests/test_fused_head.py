@@ -254,7 +254,8 @@ class TestSessionFusedDefault:
 
     def test_stream_synthesis_alias_maps_to_streamed(self, key):
         sess = self._session(stream_synthesis=True)
-        assert sess._synthesis_mode() == "streamed"
+        with pytest.deprecated_call(match="synthesis='streamed'"):
+            assert sess._synthesis_mode() == "streamed"
         sess = self._session(synthesis="streamed")
         assert sess._synthesis_mode() == "streamed"
 
@@ -338,3 +339,52 @@ class TestStreamingCompileChurn:
         cfg = H.HeadConfig(n_steps=200, lr=3e-3)
         _, losses = H.train_head_streaming(key, chunks, N_CLASSES, cfg)
         assert losses.shape == (cfg.n_steps,)
+
+
+class TestPaddedSlotStack:
+    """The fl.ingest contract on the fused trainer: a prefix of
+    identity-GMM pad rows with count 0 must not change ONE bit of the
+    trained head — leading zeros are exact under the f32 cumulative mass
+    and draw_slots' u≈1 clip lands on the last real row either way."""
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_prefix_pads_train_bit_identical_head(self, key, cov):
+        M, C = SKEWED.shape
+        batch = _random_batch(key, M, C, cov=cov)
+        stack, labels, counts, _ = _slot_stack(batch, SKEWED)
+        cfg = H.HeadConfig(n_steps=60, lr=3e-3)
+        base, base_losses = H.train_head_from_gmms(
+            key, stack["pi"], stack["mu"], stack["cov"], labels, counts,
+            N_CLASSES, cfg, cov)
+        pad = G.identity_gmm(2, DIM, cov)
+        n_pad = 5
+        grow = lambda a, p: jnp.concatenate(
+            [jnp.tile(jnp.asarray(p)[None], (n_pad,) + (1,) * p.ndim), a])
+        padded, pad_losses = H.train_head_from_gmms(
+            key, grow(stack["pi"], pad["pi"]), grow(stack["mu"], pad["mu"]),
+            grow(stack["cov"], pad["cov"]),
+            jnp.concatenate([jnp.zeros((n_pad,), jnp.int32), labels]),
+            jnp.concatenate([jnp.zeros((n_pad,), jnp.int32),
+                             jnp.asarray(counts)]),
+            N_CLASSES, cfg, cov)
+        for k in ("w", "b"):
+            np.testing.assert_array_equal(np.asarray(base[k]),
+                                          np.asarray(padded[k]))
+        np.testing.assert_array_equal(np.asarray(base_losses),
+                                      np.asarray(pad_losses))
+
+    def test_mismatched_slot_metadata_raises(self, key):
+        batch = _random_batch(key, *SKEWED.shape)
+        stack, labels, counts, _ = _slot_stack(batch, SKEWED)
+        with pytest.raises(ValueError, match="one label and one draw count"):
+            H.train_head_from_gmms(key, stack["pi"], stack["mu"],
+                                   stack["cov"], labels[:-1], counts,
+                                   N_CLASSES, H.HeadConfig(n_steps=5), "diag")
+
+    @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
+    def test_identity_gmm_is_sampler_safe(self, key, cov):
+        pad = G.identity_gmm(3, DIM, cov)
+        fac = G.sampling_factor(jnp.asarray(pad["cov"])[None], cov)
+        assert np.isfinite(np.asarray(fac)).all()
+        np.testing.assert_allclose(np.asarray(pad["pi"]).sum(), 1.0,
+                                   rtol=1e-6)

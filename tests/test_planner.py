@@ -205,7 +205,7 @@ class TestSessionIntegration:
     def test_stream_synthesis_matches_pooled_session(self, key):
         clients, xt, yt = self._clients(key)
         res_pool = self._session().run(key, clients)
-        res_stream = self._session(stream_synthesis=True).run(key, clients)
+        res_stream = self._session(synthesis="streamed").run(key, clients)
         acc_p = float(H.accuracy(res_pool.model, xt, yt))
         acc_s = float(H.accuracy(res_stream.model, xt, yt))
         assert acc_s > 0.6 and abs(acc_p - acc_s) < 0.1, (acc_p, acc_s)
