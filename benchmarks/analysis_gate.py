@@ -1,0 +1,45 @@
+"""ISSUE 7: the static-analysis lane as benchmark rows.
+
+Emits lint wall time + finding counts (the gate itself), the semantic
+pass, and the recompile-churn trace grid — so BENCH_<n>.json tracks
+analyzer latency and jaxpr-stability across PRs the same way it tracks
+kernel throughput."""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from benchmarks import common as C
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def main(quick: bool = False):
+    from repro.analysis import analyze_paths, gating
+
+    t0 = time.time()
+    ast_f = analyze_paths([str(ROOT / "src" / "repro"),
+                           str(ROOT / "benchmarks"),
+                           str(ROOT / "examples")], semantic=False)
+    C.emit("analysis/ast_lint", (time.time() - t0) * 1e6,
+           f"findings={len(ast_f)};gating={len(gating(ast_f))};"
+           f"suppressed={sum(1 for f in ast_f if f.suppressed)}")
+
+    t0 = time.time()
+    sem_f = analyze_paths([str(ROOT / "src" / "repro")], semantic=True)
+    C.emit("analysis/semantic", (time.time() - t0) * 1e6,
+           f"findings={len(sem_f)};gating={len(gating(sem_f))}")
+
+    # the retrace grid is cheap (~1.5 s) — always emit it so every
+    # BENCH_<n>.json tracks jaxpr stability
+    del quick
+    from repro.analysis.compile import grid_report
+    for name, rep in grid_report().items():
+        C.emit(f"analysis/retrace/{name}", rep["us"],
+               f"cases={rep['cases']};"
+               f"distinct_jaxprs={rep['distinct_jaxprs']};"
+               f"errors={rep['errors']}")
+
+
+if __name__ == "__main__":
+    main()

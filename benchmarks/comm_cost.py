@@ -35,9 +35,10 @@ def main(quick: bool = False):
     # measured: pack a real fitted GMM and count actual wire scalars
     key = jax.random.PRNGKey(6)
     d, K = 64, 5
-    x = jax.random.normal(key, (500, d))
-    for cov in ("full", "diag", "spher"):
-        g, _ = G.fit_gmm(key, x, jnp.ones(500),
+    k_x, k_fit = jax.random.split(key)
+    x = jax.random.normal(k_x, (500, d))
+    for ci, cov in enumerate(("full", "diag", "spher")):
+        g, _ = G.fit_gmm(jax.random.fold_in(k_fit, ci), x, jnp.ones(500),
                          G.GMMConfig(n_components=K, cov_type=cov, n_iter=3))
         packed = G.pack_wire(g, cov)
         measured = sum(a.size * a.dtype.itemsize

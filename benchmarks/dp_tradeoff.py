@@ -31,8 +31,9 @@ def main(quick: bool = False):
     cfg = FP.FedPFTConfig(
         gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
         head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
+    k_fit, k_agg = jax.random.split(key)
     base_msgs = [FP.client_update(k, cf, cy, Cn, cfg)
-                 for k, (cf, cy) in zip(jax.random.split(key, N_CLIENTS),
+                 for k, (cf, cy) in zip(jax.random.split(k_fit, N_CLIENTS),
                                         clients)]
 
     eps_grid = [0.2, 0.5, 1.0, 2.0, 5.0, float("inf")]
@@ -49,7 +50,10 @@ def main(quick: bool = False):
                     DP.DPConfig(epsilon=eps, delta=1e-2))
                 mm.gmms = jax.device_get(priv)
             msgs.append(mm)
-        (head, info), us = C.timed(FP.server_aggregate, key, msgs, Cn, cfg)
+        # deliberate same-stream replay: one key across the ε grid, so the
+        # synthesis draws are identical and the sweep isolates DP noise
+        (head, info), us = C.timed(FP.server_aggregate, k_agg,  # lint: disable=KEY-CHAIN
+                                   msgs, Cn, cfg)
         C.emit(f"dp_tradeoff/eps_{eps}", us,
                f"acc={C.accuracy(head, ftn, yt):.4f};"
                f"comm={info['comm_bytes']}")

@@ -26,6 +26,7 @@ BETA = 0.1
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(0)
+    k_cent, k_heads, k_sweep, k_dp, k_mr = jax.random.split(key, 5)
     task = C.BenchTask()
     f, y, ft, yt = C.make_feature_task(task)
     d = int(f.shape[1])
@@ -36,7 +37,7 @@ def main(quick: bool = False):
 
     # ---- Centralized oracle (raw feature transfer) ----
     cfg0 = C.default_fp_cfg()
-    (head_c, info_c), us = C.timed(FP.centralized_baseline, key, clients,
+    (head_c, info_c), us = C.timed(FP.centralized_baseline, k_cent, clients,
                                    Cn, cfg0)
     C.emit("frontier/centralized", us,
            f"acc={C.accuracy(head_c, ft, yt):.4f};comm={info_c['comm_bytes']}")
@@ -48,12 +49,13 @@ def main(quick: bool = False):
                               summarizer=FA.HeadSummarizer(n_steps=150,
                                                            lr=3e-3))
     # encode each client head ONCE; the three aggregators reuse the messages
-    ks = jax.random.split(key, len(clients) + 1)
+    ks = jax.random.split(k_heads, len(clients) + 1)
     head_msgs = [base_sess.client_update(k, cf, cy)
                  for k, (cf, cy) in zip(ks[1:], clients)]
-    for agg in ("ensemble", "avg", "fedbe"):
+    agg_keys = jax.random.split(ks[0], 3)
+    for ai, agg in enumerate(("ensemble", "avg", "fedbe")):
         res = dataclasses.replace(base_sess, aggregate=agg) \
-            .server_aggregate(ks[0], head_msgs)
+            .server_aggregate(agg_keys[ai], head_msgs)
         if agg == "avg":
             acc = C.accuracy(res.model, ft, yt)
         else:
@@ -67,9 +69,11 @@ def main(quick: bool = False):
               ("spher", 5), ("spher", 10)]
     if quick:
         sweeps = [("diag", 5), ("spher", 5)]
-    for cov, K in sweeps:
+    for si, (cov, K) in enumerate(sweeps):
         cfg = C.default_fp_cfg(K=K, cov=cov)
-        (head, info), us = C.timed(FP.run_fedpft, key, clients, Cn, cfg)
+        (head, info), us = C.timed(FP.run_fedpft,
+                                   jax.random.fold_in(k_sweep, si),
+                                   clients, Cn, cfg)
         C.emit(f"frontier/fedpft_{cov}_k{K}", us,
                f"acc={C.accuracy(head, ft, yt):.4f};"
                f"comm={info['comm_bytes']}")
@@ -86,7 +90,7 @@ def main(quick: bool = False):
     cfg = FP.FedPFTConfig(
         gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
         head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
-    head, info = DP.run_dp_fedpft(key, clientsD, Cn, cfg,
+    head, info = DP.run_dp_fedpft(k_dp, clientsD, Cn, cfg,
                                   DP.DPConfig(epsilon=1.0, delta=1e-2),
                                   min_class_count=50)
     ftn = ftD / jnp.maximum(jnp.linalg.norm(ftD, axis=-1, keepdims=True),
@@ -97,12 +101,16 @@ def main(quick: bool = False):
 
     # ---- multi-round comparators ----
     rounds_grid = [1, 5, 20] if not quick else [1, 5]
-    for name, kw in [("fedavg", {}), ("fedprox", dict(prox=0.1)),
-                     ("fedyogi", dict(server="yogi", server_lr=3e-3)),
-                     ("dsfl", dict(topk_frac=0.25))]:
+    for mi, (name, kw) in enumerate([
+            ("fedavg", {}), ("fedprox", dict(prox=0.1)),
+            ("fedyogi", dict(server="yogi", server_lr=3e-3)),
+            ("dsfl", dict(topk_frac=0.25))]):
         for r in rounds_grid:
             mk = FB.MultiRoundConfig(rounds=r, local_steps=30, lr=1e-2, **kw)
-            (gh, info), us = C.timed(FB.fedavg, key, clients, Cn, mk)
+            (gh, info), us = C.timed(
+                FB.fedavg,
+                jax.random.fold_in(jax.random.fold_in(k_mr, mi), r),
+                clients, Cn, mk)
             C.emit(f"frontier/{name}_r{r}", us,
                    f"acc={C.accuracy(gh, ft, yt):.4f};"
                    f"comm={info['comm_bytes']}")

@@ -14,12 +14,13 @@ from repro.core import head as H
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(3)
+    k_head, k_grid = jax.random.split(key)
     task = C.BenchTask()
     f, y, ft, yt = C.make_feature_task(task)
     d, Cn = int(f.shape[1]), task.n_classes
 
     # oracle: raw features
-    head_raw, _ = H.train_head(key, f, y, Cn, H.HeadConfig(n_steps=400,
+    head_raw, _ = H.train_head(k_head, f, y, Cn, H.HeadConfig(n_steps=400,
                                                            lr=3e-3))
     acc_raw = C.accuracy(head_raw, ft, yt)
     C.emit("gmm_quality/raw_features", 0,
@@ -30,9 +31,11 @@ def main(quick: bool = False):
             ("full", 1), ("full", 10)]
     if quick:
         grid = [("spher", 5), ("diag", 5), ("full", 1)]
-    for cov, K in grid:
+    for gi, (cov, K) in enumerate(grid):
         cfg = C.default_fp_cfg(K=K, cov=cov)
-        (head, info), us = C.timed(FP.run_fedpft, key, [(f, y)], Cn, cfg)
+        (head, info), us = C.timed(FP.run_fedpft,
+                                   jax.random.fold_in(k_grid, gi),
+                                   [(f, y)], Cn, cfg)
         acc = C.accuracy(head, ft, yt)
         n_par = G.n_parameters(cov, d, K, Cn)
         C.emit(f"gmm_quality/{cov}_k{K}", us,

@@ -16,6 +16,7 @@ from repro.core import reconstruction as RA
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(5)
+    k_feat, k_gmm, k_gmm1, k_priv = jax.random.split(key, 4)
     dcfg = D.DatasetConfig(n_classes=8, n_per_class=300 if not quick else 80,
                            input_dim=32, class_sep=2.0)
     x_att, y_att = D.make_dataset(dcfg)            # attacker's public data
@@ -23,7 +24,7 @@ def main(quick: bool = False):
 
     # over-complete mildly-nonlinear feature extractor (invertible enough
     # that raw features leak — the paper's premise)
-    W = jax.random.normal(key, (32, 96)) / jnp.sqrt(32.0)
+    W = jax.random.normal(k_feat, (32, 96)) / jnp.sqrt(32.0)
     f = lambda z: jnp.tanh(0.3 * z @ W)
 
     atk_cfg = RA.AttackConfig()
@@ -41,7 +42,7 @@ def main(quick: bool = False):
 
     fd = f(x_def)
     gm, cnt, _ = G.fit_classwise_gmms(
-        key, fd, y_def, 8, G.GMMConfig(n_components=5, cov_type="diag",
+        k_gmm, fd, y_def, 8, G.GMMConfig(n_components=5, cov_type="diag",
                                        n_iter=15))
     samp = jnp.concatenate([
         G.sample(jax.random.PRNGKey(50 + c),
@@ -52,10 +53,10 @@ def main(quick: bool = False):
     # DP: K=1 full cov on normalized features
     fdn = fd / jnp.maximum(jnp.linalg.norm(fd, axis=-1, keepdims=True), 1.0)
     gm1, cnt1, _ = G.fit_classwise_gmms(
-        key, fdn, y_def, 8, G.GMMConfig(n_components=1, cov_type="full",
-                                        n_iter=5))
-    priv = DP.privatize_classwise(key, gm1, cnt1, DP.DPConfig(epsilon=1.0,
-                                                              delta=1e-2))
+        k_gmm1, fdn, y_def, 8, G.GMMConfig(n_components=1, cov_type="full",
+                                           n_iter=5))
+    priv = DP.privatize_classwise(k_priv, gm1, cnt1,
+                                  DP.DPConfig(epsilon=1.0, delta=1e-2))
     samp_dp = jnp.concatenate([
         G.sample(jax.random.PRNGKey(90 + c),
                  jax.tree.map(lambda a: a[c], priv), int(cnt1[c]), "full")

@@ -27,6 +27,12 @@ JSON so the perf trajectory is machine-readable across PRs.
                                       clients/sec folded + peak resident
                                       bytes vs the stacked-cohort cost
   roofline_report   deliverable (g)   dry-run roofline table
+  analysis_gate     ISSUE 7           lint wall time + finding counts +
+                                      recompile-churn trace grid
+
+``--sanitize`` additionally runs every module under
+``repro.analysis.sanitize`` (debug_nans/debug_infs + a non-strict PRNG
+key-reuse tracer) and emits per-module ``analysis/sanitize/*`` rows.
 """
 from __future__ import annotations
 
@@ -40,7 +46,7 @@ from benchmarks import common as C
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
            "em_bench", "head_bench", "ingest_bench", "frontier",
-           "roofline_report"]
+           "roofline_report", "analysis_gate"]
 
 
 def main(argv=None) -> None:
@@ -53,6 +59,10 @@ def main(argv=None) -> None:
                     help="also write the rows as {name: us_per_call} JSON "
                          "(e.g. BENCH_5.json) for the machine-readable "
                          "perf trajectory")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run each module under repro.analysis.sanitize "
+                         "(debug_nans/infs + non-strict key-reuse "
+                         "tracer); emits analysis/sanitize/<module> rows")
     args = ap.parse_args(argv)
     mods = args.only.split(",") if args.only else MODULES
 
@@ -62,7 +72,15 @@ def main(argv=None) -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=args.quick)
+            if args.sanitize:
+                from repro.analysis import sanitize
+                with sanitize(strict=False) as st:
+                    mod.main(quick=args.quick)
+                C.emit(f"analysis/sanitize/{name}", 0.0,
+                       f"checked={st.n_checked};reused={st.n_errors};"
+                       f"tracer_skipped={st.n_skipped_tracer}")
+            else:
+                mod.main(quick=args.quick)
             C.emit(f"{name}/__total__", (time.time() - t0) * 1e6, "ok")
         except Exception:
             traceback.print_exc()

@@ -21,7 +21,7 @@ def _eval_methods(key, src, dst, test, n_classes, tag, quick):
     (fs, ys), (fd, yd) = src, dst
     ft, yt = test
     d = int(fs.shape[1])
-    ks = jax.random.split(key, 8)
+    ks = jax.random.split(key, 10)
 
     # Centralized oracle
     cfg = C.default_fp_cfg(K=10)
@@ -30,10 +30,10 @@ def _eval_methods(key, src, dst, test, n_classes, tag, quick):
     C.emit(f"shifts/{tag}/centralized", 0,
            f"acc={C.accuracy(head_c, ft, yt):.4f};comm={info_c['comm_bytes']}")
 
-    # local heads → ensemble / avg / kd
-    h_src = FB.local_train(ks[1], H.init_head(ks[1], d, n_classes), fs, ys,
+    # local heads → ensemble / avg / kd (distinct init + train keys)
+    h_src = FB.local_train(ks[1], H.init_head(ks[2], d, n_classes), fs, ys,
                            n_classes, n_steps=200, lr=3e-3)
-    h_dst = FB.local_train(ks[2], H.init_head(ks[2], d, n_classes), fd, yd,
+    h_dst = FB.local_train(ks[3], H.init_head(ks[4], d, n_classes), fd, yd,
                            n_classes, n_steps=200, lr=3e-3)
     hb = FB.head_comm_bytes(d, n_classes)
     pred = FB.ensemble_predict([h_src, h_dst], ft)
@@ -41,17 +41,17 @@ def _eval_methods(key, src, dst, test, n_classes, tag, quick):
     C.emit(f"shifts/{tag}/ensemble", 0, f"acc={acc:.4f};comm={hb}")
     acc = C.accuracy(FB.avg_heads([h_src, h_dst]), ft, yt)
     C.emit(f"shifts/{tag}/avg", 0, f"acc={acc:.4f};comm={hb}")
-    h_kd = FB.kd_transfer(ks[3], h_src, h_dst, fd, yd, n_classes,
+    h_kd = FB.kd_transfer(ks[5], h_src, h_dst, fd, yd, n_classes,
                           n_steps=200)
     C.emit(f"shifts/{tag}/kd", 0,
            f"acc={C.accuracy(h_kd, ft, yt):.4f};comm={hb}")
 
     # FedPFT: source sends GMMs once; destination trains on union
     Ks = [10] if quick else [10, 20]
-    for K in Ks:
+    for j, K in enumerate(Ks):
         cfg = C.default_fp_cfg(K=K)
-        msgs, infos = DC.run_chain(ks[4], [(fs, ys), (fd, yd)], n_classes,
-                                   cfg)
+        msgs, infos = DC.run_chain(ks[6 + j], [(fs, ys), (fd, yd)],
+                                   n_classes, cfg)
         comm = msgs[0].comm_bytes   # v2 message: exact payload length
         C.emit(f"shifts/{tag}/fedpft_k{K}", 0,
                f"acc={C.accuracy(infos[-1]['head'], ft, yt):.4f};"
@@ -60,12 +60,13 @@ def _eval_methods(key, src, dst, test, n_classes, tag, quick):
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(1)
+    k_label, k_cov, k_task = jax.random.split(key, 3)
     task = C.BenchTask()
 
     # ---- disjoint label shift ----
     f, y, ft, yt = C.make_feature_task(task)
     src_i, dst_i = D.disjoint_label_split(np.asarray(y))
-    _eval_methods(key, (f[src_i], y[src_i]), (f[dst_i], y[dst_i]),
+    _eval_methods(k_label, (f[src_i], y[src_i]), (f[dst_i], y[dst_i]),
                   (ft, yt), task.n_classes, "label", quick)
 
     # ---- covariate shift (domain 0 → domain 1) ----
@@ -73,7 +74,7 @@ def main(quick: bool = False):
     f1, y1, ft1, yt1 = C.make_feature_task(task, domain=1, seed=3)
     ftb = jnp.concatenate([ft0, ft1])
     ytb = jnp.concatenate([yt0, yt1])
-    _eval_methods(key, (f0, y0), (f1, y1), (ftb, ytb), task.n_classes,
+    _eval_methods(k_cov, (f0, y0), (f1, y1), (ftb, ytb), task.n_classes,
                   "covariate", quick)
 
     # ---- task shift (two disjoint label spaces) ----
@@ -82,7 +83,7 @@ def main(quick: bool = False):
     fb, yb, ftb2, ytb2 = C.make_feature_task(ta, seed=11)
     yb = yb + 8
     ytb2 = ytb2 + 8
-    _eval_methods(key, (fa, ya), (fb, yb),
+    _eval_methods(k_task, (fa, ya), (fb, yb),
                   (jnp.concatenate([fta, ftb2]),
                    jnp.concatenate([yta, ytb2])), 16, "task", quick)
 

@@ -19,6 +19,7 @@ PER_CLIENT = 100
 
 def main(quick: bool = False):
     key = jax.random.PRNGKey(2)
+    k_chain, k_local, k_cent = jax.random.split(key, 3)
     task = C.BenchTask(n_per_class=64)   # 1024 total, ~100/client after split
     f, y, ft, yt = C.make_feature_task(task)
     idx = np.random.RandomState(0).permutation(len(y))[
@@ -27,8 +28,8 @@ def main(quick: bool = False):
     clients = [(f[s], y[s]) for s in shards]
 
     cfg = C.default_fp_cfg(K=3, head_steps=300)
-    (msgs, infos), us = C.timed(DC.run_chain, key, clients, task.n_classes,
-                                cfg)
+    (msgs, infos), us = C.timed(DC.run_chain, k_chain, clients,
+                                task.n_classes, cfg)
     for i, info in enumerate(infos):
         C.emit(f"topology/client{i+1}", us / N_CLIENTS,
                f"acc={C.accuracy(info['head'], ft, yt):.4f};"
@@ -37,7 +38,8 @@ def main(quick: bool = False):
     # local-only baselines (no transfer)
     d = int(f.shape[1])
     for i, (cf, cy) in enumerate(clients):
-        h = FB.local_train(key, H.init_head(key, d, task.n_classes), cf, cy,
+        ki, kt = jax.random.split(jax.random.fold_in(k_local, i))
+        h = FB.local_train(kt, H.init_head(ki, d, task.n_classes), cf, cy,
                            task.n_classes, n_steps=200, lr=3e-3)
         C.emit(f"topology/local_only{i+1}", 0,
                f"acc={C.accuracy(h, ft, yt):.4f}")
@@ -45,7 +47,7 @@ def main(quick: bool = False):
             break
 
     # centralized upper bound
-    head_c, _ = FP.centralized_baseline(key, clients, task.n_classes, cfg)
+    head_c, _ = FP.centralized_baseline(k_cent, clients, task.n_classes, cfg)
     C.emit("topology/centralized", 0,
            f"acc={C.accuracy(head_c, ft, yt):.4f}")
 

@@ -44,7 +44,10 @@ def main():
     # EARLY clients also refit on the accumulated global knowledge ----
     from repro.fl import api as FA
     sess = FP.session_for(n_classes, cfg, topology=FA.Ring(laps=2))
-    res = sess.run(key, clients)
+    # deliberate same-stream replay: with the chain's key, the ring's first
+    # lap reproduces the chain pass exactly, so the printed comparison
+    # isolates what the SECOND lap adds
+    res = sess.run(key, clients)  # lint: disable=KEY-REUSE
     acc0 = float(H.accuracy(res.info["per_client"][len(clients)]["head"],
                             xt, yt))
     print(f"ring (2 laps): client 1's second-lap head acc = {acc0:.4f} "

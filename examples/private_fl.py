@@ -29,32 +29,36 @@ def main():
         gmm=G.GMMConfig(n_components=1, cov_type="full", n_iter=8),
         head=H.HeadConfig(n_steps=1200, lr=3e-2), normalize_features=True)
 
+    k_sweep, k_w, k_fit, k_samp = jax.random.split(key, 4)
     print("ε        acc     (δ=1e-2, K=1 full-cov, unit-norm features)")
+    # every ε deliberately shares ONE key: identical GMM fits + synthesis
+    # streams mean the sweep isolates the DP noise alone
     for eps in (0.5, 1.0, 2.0, float("inf")):
         if jnp.isfinite(eps):
             # DP-FedPFT through the unified FedSession: privatize → encode
             # → decode → batched synthesis, one session call
-            head, _ = DP.run_dp_fedpft(
-                key, [(x, y)], n_classes, cfg,
+            head, _ = DP.run_dp_fedpft(  # lint: disable=KEY-CHAIN
+                k_sweep, [(x, y)], n_classes, cfg,
                 DP.DPConfig(epsilon=float(eps), delta=1e-2))
         else:
             # ε=∞ reference through the SAME session (codec included), so
             # the sweep isolates the DP noise, not wire precision
             sess = FP.session_for(n_classes, cfg, normalize_features=True)
-            head = sess.run(key, [(x, y)]).model
+            head = sess.run(k_sweep, [(x, y)]).model  # lint: disable=KEY-REUSE
         acc = float(H.accuracy(head, xn(xt), yt))
         print(f"{eps:<8} {acc:.4f}")
 
     # ---- why not just send raw features? reconstruction attack ----
-    W = jax.random.normal(key, (32, 96)) / jnp.sqrt(32.0)
+    W = jax.random.normal(k_w, (32, 96)) / jnp.sqrt(32.0)
     f = lambda z: jnp.tanh(0.3 * z @ W)
     atk = RA.fit_inversion(f(x), x, RA.AttackConfig())   # attacker model
     m_raw = RA.evaluate_attack(atk, f(xt), xt, RA.AttackConfig())
-    gm, cnt, _ = G.fit_classwise_gmms(key, f(xt), yt, n_classes,
+    gm, cnt, _ = G.fit_classwise_gmms(k_fit, f(xt), yt, n_classes,
                                       G.GMMConfig(n_components=5,
                                                   n_iter=10))
     samples = jnp.concatenate([
-        G.sample(key, jax.tree.map(lambda a: a[c], gm), int(cnt[c]), "diag")
+        G.sample(jax.random.fold_in(k_samp, c),
+                 jax.tree.map(lambda a: a[c], gm), int(cnt[c]), "diag")
         for c in range(n_classes)])
     m_gmm = RA.evaluate_attack(atk, samples, xt, RA.AttackConfig())
     print(f"\nreconstruction PSNR: raw features {m_raw['psnr_oracle']:.1f} dB"

@@ -10,6 +10,11 @@ the cohort's features through the count-stratified planner (one jitted
 sample per power-of-two count bucket — ≤ 2·Σcounts draws even under the
 heavy Dirichlet skew here) and trains the global classifier head. One
 round, a fraction of the bytes, near-centralized accuracy.
+
+Before sending a change, run the repo's own linter (DESIGN.md §10) —
+key discipline, compile churn, kernel + wire contracts:
+
+    PYTHONPATH=src python -m repro.analysis src/repro benchmarks examples
 """
 import jax
 
@@ -40,14 +45,15 @@ def main():
         codec=FA.QuantizedCodec("bfloat16"),
         topology=FA.Star(),
         head=H.HeadConfig(n_steps=400, lr=3e-3))
-    res = sess.run(key, clients)
+    k_fed, k_cent = jax.random.split(key)
+    res = sess.run(k_fed, clients)
     acc = float(H.accuracy(res.model, feats_test, labels_test))
     assert res.info["comm_bytes"] == sum(len(m.payload)
                                          for m in res.messages)
 
     # ---- centralized oracle (ships raw features) ----
     cfg_v1 = FP.FedPFTConfig(gmm=sess.summarizer.gmm, head=sess.head)
-    head_c, info_c = FP.centralized_baseline(key, clients, dcfg.n_classes,
+    head_c, info_c = FP.centralized_baseline(k_cent, clients, dcfg.n_classes,
                                              cfg_v1)
     acc_c = float(H.accuracy(head_c, feats_test, labels_test))
 

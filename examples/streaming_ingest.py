@@ -46,9 +46,12 @@ def main():
             head=H.HeadConfig(n_steps=250, lr=3e-3), **kw)
 
     # -- 1. streaming session ≡ non-streaming fused session ---------------
-    base = session().run(key, clients)
-    stream = session(ingest=IG.IngestConfig(chunk_size=4,
-                                            capacity=256)).run(key, clients)
+    k_run, k_deadline, k_mem = jax.random.split(key, 3)
+    base = session().run(k_run, clients)
+    # deliberate same-stream replay: bit-identity below requires both runs
+    # to draw from one key
+    stream = session(ingest=IG.IngestConfig(  # lint: disable=KEY-REUSE
+        chunk_size=4, capacity=256)).run(k_run, clients)
     same = all(np.array_equal(np.asarray(base.model[k]),
                               np.asarray(stream.model[k]))
                for k in ("w", "b"))
@@ -64,7 +67,7 @@ def main():
     broker = IG.IngestBroker(IG.IngestConfig(chunk_size=4, capacity=256,
                                              deadline_s=3.0),
                              C, clock=lambda: next(clock))
-    keys = jax.random.split(key, len(clients) + 1)
+    keys = jax.random.split(k_deadline, len(clients) + 1)
     sess = session()
     for i, (k, (f, y)) in enumerate(zip(keys[1:], clients)):
         broker.submit(i, sess.client_update(k, f, y, i))
@@ -83,7 +86,7 @@ def main():
     for mult, seed in ((1, 1), (4, 2)):
         cohort = make_clients(12 * mult, C, d, seed=seed)
         r = session(ingest=IG.IngestConfig(chunk_size=4, capacity=256)
-                    ).run(key, cohort)
+                    ).run(jax.random.fold_in(k_mem, mult), cohort)
         peaks[len(cohort)] = r.info["ingest"]["peak_resident_bytes"]
     print("peak resident bytes by cohort size:", peaks)
 

@@ -1,0 +1,17 @@
+"""repro.analysis — JAX-aware lint + runtime sanitizers (DESIGN.md §10).
+
+Static rules (``python -m repro.analysis src/``): KEY-REUSE / KEY-CHAIN /
+KEY-SHARD key discipline, CHURN-* compile-cache hygiene, PAL-* Pallas
+kernel contracts, HOST-SYNC hot-path syncs, WIRE-CONTRACT codec layout.
+Runtime: :func:`repro.analysis.sanitize.sanitize`.
+"""
+from repro.analysis.core import (Finding, Rule, SemanticRule, Severity,
+                                 SourceFile, analyze_paths, gating,
+                                 iter_python_files, summarize)
+from repro.analysis.sanitize import KeyReuseError, sanitize
+
+__all__ = [
+    "Finding", "Rule", "SemanticRule", "Severity", "SourceFile",
+    "analyze_paths", "gating", "iter_python_files", "summarize",
+    "KeyReuseError", "sanitize",
+]

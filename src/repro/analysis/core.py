@@ -1,0 +1,231 @@
+"""Static-analysis framework core (DESIGN.md §10).
+
+A tiny rule engine purpose-built for this repo's failure modes: every rule
+is either an **AST rule** (runs per source file, pure syntax + local
+dataflow — key discipline, host syncs, compile-cache hygiene) or a
+**semantic rule** (imports the anchor modules it guards and inspects real
+jaxprs / ``pallas_call`` parameters / wire layouts — recompile churn,
+Pallas contracts, the wire contract).
+
+Findings carry ``file:line``, a rule id, a severity tier, and a fix hint.
+``ERROR`` and ``WARN`` gate (nonzero CLI exit, tier-1 test failure);
+``INFO`` is metrics-only.  A finding is suppressed by a same-line
+``# lint: disable=RULE`` (comma-separate several ids; ``*`` disables all);
+suppressed findings are still collected and counted, they just don't gate.
+
+CLI: ``python -m repro.analysis src/`` (see ``__main__.py``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import enum
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+
+class Severity(enum.IntEnum):
+    INFO = 0      # metrics only — never gates
+    WARN = 1      # gates: suspicious pattern, fix or suppress with a reason
+    ERROR = 2     # gates: a proven bug class in this repo
+
+    def __str__(self) -> str:  # "ERROR", not "Severity.ERROR"
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                 # e.g. "KEY-REUSE"
+    severity: Severity
+    path: str                 # repo-relative where possible
+    line: int                 # 1-indexed
+    message: str
+    hint: str = ""            # how to fix (or why it's safe to suppress)
+    suppressed: bool = False
+
+    def format(self) -> str:
+        sup = " [suppressed]" if self.suppressed else ""
+        hint = f"  ({self.hint})" if self.hint else ""
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.severity}]{sup} {self.message}{hint}")
+
+    @property
+    def gates(self) -> bool:
+        return not self.suppressed and self.severity >= Severity.WARN
+
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_*,\- ]+)")
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str
+    text: str
+    tree: ast.Module
+    # line → set of suppressed rule ids ("*" suppresses every rule)
+    suppressions: Dict[int, Set[str]]
+
+    @classmethod
+    def load(cls, path: str) -> "SourceFile":
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+        tree = ast.parse(text, filename=path)
+        sups: Dict[int, Set[str]] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                sups[i] = {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+        return cls(path=path, text=text, tree=tree, suppressions=sups)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        sup = self.suppressions.get(line, ())
+        return bool(sup) and (rule in sup or "*" in sup)
+
+
+class Rule:
+    """Base AST rule: ``run`` yields findings for one parsed file."""
+
+    id: str = ""
+    severity: Severity = Severity.WARN
+    doc: str = ""
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, src: SourceFile, line: int, message: str,
+                hint: str = "", severity: Optional[Severity] = None,
+                rule: Optional[str] = None) -> Finding:
+        rid = rule or self.id
+        return Finding(rule=rid, severity=severity or self.severity,
+                       path=src.path, line=line, message=message, hint=hint,
+                       suppressed=src.is_suppressed(rid, line))
+
+
+class SemanticRule(Rule):
+    """A rule that inspects *imported* anchor modules instead of syntax.
+
+    ``anchors`` names the repo-relative module files the rule guards; the
+    rule only runs when at least one scanned path covers an anchor (so
+    ``python -m repro.analysis src/repro/fl`` doesn't trace kernels).
+    ``run_project`` receives the anchor SourceFiles that are in scope, for
+    line anchoring and suppression lookup.
+    """
+
+    anchors: Sequence[str] = ()
+
+    def in_scope(self, files: Sequence[SourceFile]) -> List[SourceFile]:
+        hits = []
+        for f in files:
+            norm = f.path.replace(os.sep, "/")
+            if any(norm.endswith(a) for a in self.anchors):
+                hits.append(f)
+        return hits
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def run_project(self, files: Sequence[SourceFile]
+                    ) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def _default_rules() -> List[Rule]:
+    # local import: rule modules import this one
+    from repro.analysis import compile as compile_rules
+    from repro.analysis import hygiene, keyflow, pallas_rules, wire
+    return [
+        keyflow.KeyDisciplineRule(),
+        keyflow.ShardSeedRule(),
+        hygiene.HostSyncRule(),
+        hygiene.InlineJitRule(),
+        hygiene.StaticArgRule(),
+        compile_rules.RetraceRule(),
+        pallas_rules.PallasContractRule(),
+        wire.WireContractRule(),
+    ]
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                out.extend(os.path.join(root, n)
+                           for n in sorted(names) if n.endswith(".py"))
+    return sorted(set(out))
+
+
+def analyze_paths(paths: Sequence[str], rules: Optional[Sequence[Rule]]
+                  = None, semantic: bool = True) -> List[Finding]:
+    """Run every rule over the .py files under ``paths``.
+
+    AST rules run per file; semantic rules run once iff one of their
+    anchor modules is inside the scanned set.  Returns ALL findings
+    (suppressed ones included, flagged) sorted by location.
+    """
+    rules = list(_default_rules() if rules is None else rules)
+    files = []
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        try:
+            files.append(SourceFile.load(path))
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="PARSE", severity=Severity.ERROR, path=path,
+                line=e.lineno or 1, message=f"syntax error: {e.msg}"))
+    for src in files:
+        for rule in rules:
+            if not isinstance(rule, SemanticRule):
+                findings.extend(rule.run(src))
+    if semantic:
+        for rule in rules:
+            if isinstance(rule, SemanticRule):
+                in_scope = rule.in_scope(files)
+                if in_scope:
+                    findings.extend(rule.run_project(in_scope))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def gating(findings: Iterable[Finding]) -> List[Finding]:
+    return [f for f in findings if f.gates]
+
+
+def summarize(findings: Sequence[Finding]) -> str:
+    n_err = sum(1 for f in findings
+                if f.severity == Severity.ERROR and not f.suppressed)
+    n_warn = sum(1 for f in findings
+                 if f.severity == Severity.WARN and not f.suppressed)
+    n_info = sum(1 for f in findings
+                 if f.severity == Severity.INFO and not f.suppressed)
+    n_sup = sum(1 for f in findings if f.suppressed)
+    return (f"{len(findings)} findings: {n_err} error, {n_warn} warn, "
+            f"{n_info} info, {n_sup} suppressed")
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('' when not name-like)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def walk_functions(tree: ast.AST):
+    """Yield every FunctionDef/AsyncFunctionDef (module + class + nested)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

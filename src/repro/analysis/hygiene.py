@@ -1,0 +1,211 @@
+"""Hot-path hygiene rules: HOST-SYNC, CHURN-INLINE-JIT, CHURN-STATIC.
+
+HOST-SYNC — inside a jit-decorated function (or a def nested in one) in
+``fl/``, ``core/`` or ``kernels/``, a ``.item()`` / ``.tolist()`` /
+``float()`` / ``int()`` / ``np.asarray`` / ``jax.device_get`` on a traced
+value forces a device→host transfer per call (or a trace error).  Static
+quantities (``.shape``, ``len()``, config attributes, constants) are
+exempt.
+
+CHURN-INLINE-JIT — ``jax.jit(...)`` constructed inside a loop body builds
+a fresh callable (and a fresh compile cache) every iteration; hoist it.
+
+CHURN-STATIC — ``static_argnames`` that name a parameter that doesn't
+exist (silently ignored by jax → retrace per call), or a static parameter
+whose default is a mutable literal (unhashable → TypeError at first call).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, Rule, Severity, SourceFile, dotted
+
+_HOT_DIRS = ("repro/fl/", "repro/core/", "repro/kernels/")
+
+_SYNC_FUNCS = {"float", "int", "bool", "complex"}
+_SYNC_ATTRS = {"item", "tolist"}
+_SYNC_DOTTED = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "jax.device_get", "onp.asarray", "onp.array"}
+
+# substrings whose presence in the argument expression marks it static
+# (shape/pytree-structure arithmetic, config fields, literals)
+_STATIC_MARKERS = re.compile(
+    r"\.shape|\.ndim\b|\.size\b|\.dtype\b|\blen\(|\.n_[a-z_]+|"
+    r"\bcfg\.|\bconfig\.|\bscfg\.|\bself\.[a-z_]*cfg|\.n_steps\b|"
+    r"\bnp\.prod\(|\bmath\.")
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    name = dotted(dec)
+    if name.endswith("jax.jit") or name == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fname = dotted(dec.func)
+        if fname.endswith("jax.jit") or fname == "jit":
+            return True
+        if fname.endswith("partial") and dec.args and \
+                dotted(dec.args[0]).endswith("jit"):
+            return True
+    return False
+
+
+def _jitted_functions(tree: ast.AST):
+    """Yield (fn, via) for each jit-decorated def plus defs nested in it."""
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if any(_is_jit_decorator(d) for d in node.decorator_list):
+            yield node, node.name
+            for inner in ast.walk(node):
+                if inner is not node and isinstance(
+                        inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield inner, node.name
+
+
+class HostSyncRule(Rule):
+    id = "HOST-SYNC"
+    severity = Severity.WARN
+    doc = ("device→host sync (.item()/float()/np.asarray/device_get on a "
+           "traced value) inside a jitted function in fl/, core/ or "
+           "kernels/")
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:
+        norm = src.path.replace("\\", "/")
+        if not any(d in norm for d in _HOT_DIRS):
+            return []
+        findings: List[Finding] = []
+        seen: Set[int] = set()
+        for fn, via in _jitted_functions(src.tree):
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call) or \
+                        call.lineno in seen:
+                    continue
+                hit = self._classify(call)
+                if hit is None:
+                    continue
+                seen.add(call.lineno)
+                findings.append(self.finding(
+                    src, call.lineno,
+                    f"{hit} on a traced value inside jitted "
+                    f"'{via}' forces a device sync (or a trace error)",
+                    "hoist the host conversion out of the jitted region, "
+                    "or keep the value on-device"))
+        return findings
+
+    def _classify(self, call: ast.Call) -> Optional[str]:
+        func = call.func
+        name = dotted(func)
+        if isinstance(func, ast.Attribute) and func.attr in _SYNC_ATTRS \
+                and not call.args:
+            return f".{func.attr}()"
+        if name in _SYNC_DOTTED and call.args and \
+                not self._static_arg(call.args[0]):
+            return f"{name}(...)"
+        if name in _SYNC_FUNCS and len(call.args) == 1 and \
+                not self._static_arg(call.args[0]):
+            return f"{name}(...)"
+        return None
+
+    @staticmethod
+    def _static_arg(arg: ast.AST) -> bool:
+        if isinstance(arg, ast.Constant):
+            return True
+        text = ast.unparse(arg)
+        return bool(_STATIC_MARKERS.search(text))
+
+
+class InlineJitRule(Rule):
+    id = "CHURN-INLINE-JIT"
+    severity = Severity.WARN
+    doc = ("jax.jit(...) constructed inside a loop body — a fresh compile "
+           "cache every iteration")
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for loop in ast.walk(src.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for call in ast.walk(loop):
+                if not isinstance(call, ast.Call):
+                    continue
+                fname = dotted(call.func)
+                if fname.endswith("jax.jit") or fname == "jit":
+                    findings.append(self.finding(
+                        src, call.lineno,
+                        "jax.jit(...) built inside a loop body — every "
+                        "iteration creates a new callable with an empty "
+                        "compile cache",
+                        "hoist the jit(...) above the loop (the cache "
+                        "lives on the callable)"))
+        return findings
+
+
+class StaticArgRule(Rule):
+    id = "CHURN-STATIC"
+    severity = Severity.WARN
+    doc = ("static_argnames naming a nonexistent parameter (silently "
+           "ignored → retrace per call) or a static parameter with a "
+           "mutable default (unhashable)")
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in fn.decorator_list:
+                statics = self._static_names(dec)
+                if statics is None:
+                    continue
+                params, defaults = self._signature(fn)
+                for s in statics:
+                    if s not in params:
+                        findings.append(self.finding(
+                            src, dec.lineno,
+                            f"static_argnames names '{s}' but "
+                            f"'{fn.name}' has no such parameter — jax "
+                            f"ignores it and retraces on every distinct "
+                            f"call", "fix the name (or drop it)"))
+                    elif isinstance(defaults.get(s),
+                                    (ast.List, ast.Dict, ast.Set)):
+                        findings.append(self.finding(
+                            src, dec.lineno,
+                            f"static parameter '{s}' of '{fn.name}' "
+                            f"defaults to a mutable literal — unhashable "
+                            f"static args fail at the first call",
+                            "use a tuple / frozen dataclass default"))
+        return findings
+
+    @staticmethod
+    def _static_names(dec: ast.AST) -> Optional[Sequence[str]]:
+        if not isinstance(dec, ast.Call):
+            return None
+        fname = dotted(dec.func)
+        is_jit = fname.endswith("jax.jit") or fname == "jit" or (
+            fname.endswith("partial") and dec.args
+            and dotted(dec.args[0]).endswith("jit"))
+        if not is_jit:
+            return None
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    return [v.value]
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    return [e.value for e in v.elts
+                            if isinstance(e, ast.Constant)]
+        return None
+
+    @staticmethod
+    def _signature(fn) -> Tuple[Set[str], dict]:
+        a = fn.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        defaults = {}
+        pos = a.posonlyargs + a.args
+        for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+            defaults[p.arg] = d
+        for p, d in zip(a.kwonlyargs, a.kw_defaults):
+            if d is not None:
+                defaults[p.arg] = d
+        return params, defaults

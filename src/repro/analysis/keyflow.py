@@ -1,0 +1,661 @@
+"""PRNG key discipline: the dataflow pass behind KEY-REUSE / KEY-CHAIN /
+KEY-SHARD.
+
+Three shipped PRs each fixed an independently-introduced key bug (PR 1
+synthesis serial chain, PR 2 ``_kmeans_init`` double consume, PR 4
+cross-shard seed collision) — this pass retro-detects all three from their
+pre-fix sources (tests/fixtures/lint/) and gates the tree against the
+whole class.
+
+Model: a *key* value is created by ``PRNGKey``/``key``/``fold_in`` or by
+splitting, and is **consumed** by ``jax.random.split``, by any
+``jax.random`` sampler, or by being passed to an unknown function (the
+repo convention: a function that receives a key owns it).  ``fold_in``
+derives without consuming.  The pass is intraprocedural and
+path-approximate:
+
+* branches merge with MUST-consumed semantics (consumed only if consumed
+  on every non-terminating path) — zero-false-positive bias;
+* loop bodies are analyzed twice, so a loop-carried key consumed each
+  iteration without rebinding surfaces as KEY-CHAIN;
+* rebinding a carried key from its own split inside a loop
+  (``key, k = split(key)`` / ``keys = split(key, n); key = keys[0]``) is
+  the PR 1 serial-chain hazard — draws become iteration-order- and
+  count-dependent, which the batched server path must never be
+  (DESIGN.md §2: fold_in on stable slot ids);
+* functions passed to multi-invocation HOFs (tree.map, vmap, lax.scan,
+  comprehensions, …) run many times — a consuming call on a
+  closure-captured key inside one is a reuse even though it appears once
+  syntactically (the PR 6 ``fedbe`` per-leaf bug shape).
+
+KEY-SHARD (separate rule): inside a ``shard_map``-mapped function, keys
+built from seeds with no ``axis_index`` taint are identical on every
+shard — the PR 4 bug (pre-fix ``distributed.py`` seeded
+``arange(I_local) + seed`` on all shards).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from repro.analysis.core import Finding, Rule, Severity, SourceFile, dotted
+
+# --- what counts as a key / key array, by name (params + closures) --------
+_KEY_NAME = re.compile(r"^(key|rng|subkey|k\d?|kk)$|^k_[a-z0-9_]+$|_key$")
+_KEYS_NAME = re.compile(r"^(keys|ks|subkeys)$|_keys$|^round_keys$")
+
+# --- jax.random consumers -------------------------------------------------
+_SAMPLERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "f", "gamma", "generalized_normal", "geometric",
+    "gumbel", "laplace", "loggamma", "logistic", "maxwell",
+    "multivariate_normal", "normal", "orthogonal", "permutation",
+    "poisson", "rademacher", "randint", "rayleigh", "t", "triangular",
+    "truncated_normal", "uniform", "wald", "weibull_min",
+}
+_RANDOM_RE = re.compile(r"(^|\.)random\.([A-Za-z_]+)$")
+
+# calls that never consume a key passed to them
+_BENIGN_PREFIXES = (
+    "jnp.", "np.", "numpy.", "jax.numpy.", "math.", "jax.tree.",
+    "jax.tree_util.", "jax.debug.", "jax.device_get", "jax.device_put",
+    "jax.block_until_ready", "jax.eval_shape", "jax.make_jaxpr",
+    "jax.random.key_data", "jax.random.wrap_key_data",
+)
+_BENIGN_NAMES = {
+    "len", "print", "repr", "str", "int", "float", "bool", "isinstance",
+    "type", "list", "tuple", "dict", "set", "sorted", "reversed", "zip",
+    "enumerate", "range", "min", "max", "sum", "abs", "hash", "id",
+    "getattr", "hasattr", "format",
+}
+
+# HOFs whose function argument runs once per element — a consuming call on
+# a closure-captured key inside is a reuse
+_MULTI_HOFS = {
+    "map", "filter", "jax.tree.map", "jax.tree_map", "jax.tree.map_with_path",
+    "jax.tree_util.tree_map", "tree.map", "jax.vmap", "vmap", "jax.pmap",
+    "jax.lax.map", "lax.map", "jax.lax.scan", "lax.scan",
+}
+
+_FRESH, _CONSUMED = 0, 1
+
+
+@dataclasses.dataclass
+class KeyEntry:
+    """One key (or key-array) binding."""
+    kind: str                       # "key" | "keys"
+    state: int = _FRESH
+    line: int = 0                   # where consumed
+    split_src: str = ""             # for "keys": name of the key it split
+    elems: Dict[int, int] = dataclasses.field(default_factory=dict)
+    origin_loop_depth: int = 0      # loop depth at creation
+
+
+@dataclasses.dataclass
+class _Value:
+    """Abstract value of an expression."""
+    kind: str = "other"             # "key" | "keys" | "other"
+    split_src: str = ""
+
+
+_OTHER = _Value()
+
+
+class _FuncAnalyzer:
+    """Path-approximate interpreter for one function (or module) body."""
+
+    def __init__(self, rule: "KeyDisciplineRule", src: SourceFile,
+                 closure: Optional[Dict[str, KeyEntry]] = None):
+        self.rule = rule
+        self.src = src
+        self.env: Dict[str, KeyEntry] = {}
+        self.closure = closure or {}
+        self.loop_depth = 0
+        self.local_defs: Dict[str, ast.FunctionDef] = {}
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, int, str]] = set()
+
+    # -- findings ----------------------------------------------------------
+    def emit(self, rule_id: str, node: ast.AST, name: str, message: str,
+             hint: str, severity: Severity):
+        key = (rule_id, node.lineno, name)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(self.rule.finding(
+            self.src, node.lineno, message, hint=hint, severity=severity,
+            rule=rule_id))
+
+    def _flag_reuse(self, node: ast.AST, name: str, entry: KeyEntry):
+        if self.loop_depth > 0 and entry.line == node.lineno:
+            # same site consuming twice across simulated loop iterations:
+            # the key is carried into the loop and never rebound
+            self.emit(
+                "KEY-CHAIN", node, name,
+                f"key '{name}' is carried across loop iterations and "
+                f"consumed every pass without being re-split",
+                "split per-iteration keys before the loop, or fold_in a "
+                "stable per-iteration id", Severity.WARN)
+        else:
+            self.emit(
+                "KEY-REUSE", node, name,
+                f"key '{name}' is consumed again (first consumed on line "
+                f"{entry.line})",
+                "jax.random.split it (or fold_in a distinct id) — each "
+                "consumption needs a fresh key", Severity.ERROR)
+
+    # -- consumption -------------------------------------------------------
+    def consume_name(self, name: str, node: ast.AST):
+        entry = self.env.get(name)
+        if entry is None:
+            return
+        if entry.state == _CONSUMED:
+            self._flag_reuse(node, name, entry)
+        entry.state = _CONSUMED
+        entry.line = node.lineno
+
+    def consume_elem(self, name: str, idx: int, node: ast.AST):
+        entry = self.env.get(name)
+        if entry is None or entry.kind != "keys":
+            return
+        if entry.state == _CONSUMED or entry.elems.get(idx) == _CONSUMED:
+            self._flag_reuse(node, f"{name}[{idx}]", entry)
+        entry.elems[idx] = _CONSUMED
+        entry.line = node.lineno
+
+    def consume_arg(self, arg: ast.AST, node: ast.Call):
+        """An expression passed as an argument to a consuming call."""
+        if isinstance(arg, ast.Name):
+            self.consume_name(arg.id, node)
+        elif (isinstance(arg, ast.Subscript)
+              and isinstance(arg.value, ast.Name)):
+            sl = arg.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, int):
+                self.consume_elem(arg.value.id, sl.value, node)
+            # non-constant index (keys[i] in a loop): distinct per
+            # iteration — not trackable, never flagged
+
+    # -- expression evaluation --------------------------------------------
+    def eval(self, node: Optional[ast.AST]) -> _Value:
+        if node is None:
+            return _OTHER
+        if isinstance(node, ast.Call):
+            return self.eval_call(node)
+        if isinstance(node, ast.Name):
+            entry = self.env.get(node.id)
+            if entry is not None:
+                return _Value(entry.kind, entry.split_src)
+            return _OTHER
+        if isinstance(node, ast.Subscript):
+            base = self.eval(node.value)
+            self.eval(node.slice)
+            if base.kind == "keys":
+                # an element of a key array is a key; remember which split
+                # produced the array (serial-chain detection)
+                return _Value("key", base.split_src)
+            return _OTHER
+        if isinstance(node, (ast.Lambda,)):
+            return _OTHER          # analyzed only when passed to a HOF
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            self.eval_comprehension(node)
+            return _OTHER
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test)
+            self.eval(node.body)
+            self.eval(node.orelse)
+            return _OTHER
+        if isinstance(node, ast.BoolOp):
+            for v in node.values:
+                self.eval(v)
+            return _OTHER
+        # generic: evaluate children
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.eval(child)
+        return _OTHER
+
+    def eval_call(self, node: ast.Call) -> _Value:
+        fname = dotted(node.func)
+
+        # evaluate nested call arguments first where they are themselves
+        # calls/comprehensions (left-to-right, like Python)
+        def eval_subexprs():
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                if not isinstance(a, (ast.Name, ast.Subscript)):
+                    self.eval(a)
+            if not isinstance(node.func, (ast.Name, ast.Attribute)):
+                self.eval(node.func)
+
+        m = _RANDOM_RE.search(fname)
+        if m:
+            op = m.group(2)
+            args = list(node.args)
+            kw = {k.arg: k.value for k in node.keywords}
+            key_arg = args[0] if args else kw.get("key")
+            if op == "split":
+                eval_subexprs()
+                src_name = key_arg.id if isinstance(key_arg, ast.Name) \
+                    else ""
+                if key_arg is not None:
+                    self.consume_arg(key_arg, node)
+                return _Value("keys", split_src=src_name)
+            if op == "fold_in":
+                eval_subexprs()
+                return _Value("key")         # derives, does not consume
+            if op in ("PRNGKey", "key"):
+                eval_subexprs()
+                return _Value("key")
+            if op in _SAMPLERS:
+                eval_subexprs()
+                if key_arg is not None:
+                    self.consume_arg(key_arg, node)
+                return _OTHER
+            eval_subexprs()
+            return _OTHER
+
+        # HOFs first: jax.tree.map is benign *except* for the body it maps
+        if fname in _MULTI_HOFS:
+            for a in node.args:
+                if isinstance(a, ast.Lambda):
+                    self.analyze_hof_body(a, fname)
+                elif isinstance(a, ast.Name) and a.id in self.local_defs:
+                    self.analyze_hof_body(self.local_defs[a.id], fname)
+                else:
+                    self.eval(a)
+            for k in node.keywords:
+                self.eval(k.value)
+            return _OTHER
+
+        if fname in _BENIGN_NAMES or \
+                any(fname.startswith(p) for p in _BENIGN_PREFIXES):
+            eval_subexprs()
+            return _OTHER
+
+        if fname.endswith("shard_map") or fname.endswith("smap"):
+            # shard bodies are covered by ShardSeedRule; don't treat the
+            # mapped function's closure keys as consumed here
+            eval_subexprs()
+            return _OTHER
+
+        # functools.partial(fn, key, ...): binding a key into a partial
+        # consumes it exactly like calling fn
+        if fname.endswith("partial"):
+            for a in node.args[1:]:
+                self.consume_arg(a, node)
+                self.eval(a) if not isinstance(a, (ast.Name, ast.Subscript)) \
+                    else None
+            for k in node.keywords:
+                self.consume_arg(k.value, node)
+            return _OTHER
+
+        # unknown call: a key handed to it is owned (consumed) by it
+        eval_subexprs()
+        for a in node.args:
+            self.consume_arg(a, node)
+        for k in node.keywords:
+            self.consume_arg(k.value, node)
+        return _OTHER
+
+    # -- multi-invocation bodies (HOF fn args, comprehensions) -------------
+    def analyze_hof_body(self, fn: Union[ast.Lambda, ast.FunctionDef],
+                         hof: str):
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        if fn.args.vararg:
+            params.add(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            params.add(fn.args.kwarg.arg)
+        body = [ast.Expr(value=fn.body)] if isinstance(fn, ast.Lambda) \
+            else fn.body
+        self._check_closure_consumption(body, params, f"'{hof}'", fn)
+
+    def eval_comprehension(self, node: ast.AST):
+        bound: Set[str] = set()
+        for gen in node.generators:
+            self.eval(gen.iter)
+            for n in ast.walk(gen.target):
+                if isinstance(n, ast.Name):
+                    bound.add(n.id)
+            for cond in gen.ifs:
+                self.eval(cond)
+        elts = []
+        if isinstance(node, ast.DictComp):
+            elts = [node.key, node.value]
+        else:
+            elts = [node.elt]
+        body = [ast.Expr(value=e) for e in elts]
+        self._check_closure_consumption(body, bound, "a comprehension",
+                                        node)
+
+    def _check_closure_consumption(self, body: Sequence[ast.stmt],
+                                   local_names: Set[str], ctx: str,
+                                   where: ast.AST):
+        """Flag consuming calls on keys captured from the enclosing scope
+        inside a body that runs once per element."""
+        # names bound anywhere inside the body (tuple unpacks of the
+        # element arg, per-element splits, …) are local, not captures
+        local_names = set(local_names)
+        for stmt in body:
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                    local_names.add(n.id)
+        for stmt in body:
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                fname = dotted(call.func)
+                m = _RANDOM_RE.search(fname)
+                consuming = bool(m and (m.group(2) in _SAMPLERS
+                                        or m.group(2) == "split"))
+                if not consuming:
+                    continue
+                args = list(call.args) + [k.value for k in call.keywords]
+                key_arg = args[0] if args else None
+                names = set()
+                if isinstance(key_arg, ast.Name):
+                    names.add(key_arg.id)
+                elif isinstance(key_arg, ast.Subscript) and \
+                        isinstance(key_arg.value, ast.Name):
+                    names.add(key_arg.value.id)
+                for name in names - local_names:
+                    if name in self.env or _KEY_NAME.match(name) \
+                            or _KEYS_NAME.match(name):
+                        self.emit(
+                            "KEY-REUSE", call, name,
+                            f"key '{name}' captured from the enclosing "
+                            f"scope is consumed inside {ctx} body that "
+                            f"runs once per element — every invocation "
+                            f"re-draws from the same key",
+                            "pass per-element keys in (split outside, or "
+                            "fold_in the element id)", Severity.ERROR)
+
+    # -- statements --------------------------------------------------------
+    def bind(self, target: ast.AST, value: _Value, node: ast.AST):
+        if isinstance(target, ast.Name):
+            name = target.id
+            carried = self.env.get(name)
+            if value.kind in ("key", "keys"):
+                # PR 1 shape: in a loop, rebinding X from split(X)'s output
+                if (self.loop_depth > 0 and value.split_src == name
+                        and carried is not None):
+                    self.emit(
+                        "KEY-CHAIN", node, name,
+                        f"key '{name}' is serially re-split from itself "
+                        f"every loop iteration — draws depend on "
+                        f"iteration order and count",
+                        "pre-split one key per iteration before the loop "
+                        "(or fold_in a stable per-iteration id)",
+                        Severity.WARN)
+                self.env[name] = KeyEntry(
+                    kind=value.kind, split_src=value.split_src,
+                    origin_loop_depth=self.loop_depth)
+            elif carried is not None:
+                del self.env[name]      # overwritten with a non-key
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            if value.kind == "keys":
+                for elt in target.elts:
+                    if isinstance(elt, ast.Starred):
+                        self.bind(elt.value, _Value("keys",
+                                                    value.split_src), node)
+                    else:
+                        self.bind(elt, _Value("key", value.split_src),
+                                  node)
+            else:
+                for elt in target.elts:
+                    e = elt.value if isinstance(elt, ast.Starred) else elt
+                    self.bind(e, _OTHER, node)
+        # attribute/subscript targets: not tracked
+
+    def run_stmts(self, body: Sequence[ast.stmt]):
+        for stmt in body:
+            self.run_stmt(stmt)
+
+    def run_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            val = self.eval(stmt.value)
+            for t in stmt.targets:
+                self.bind(t, val, stmt)
+        elif isinstance(stmt, ast.AnnAssign):
+            val = self.eval(stmt.value) if stmt.value else _OTHER
+            self.bind(stmt.target, val, stmt)
+        elif isinstance(stmt, ast.AugAssign):
+            self.eval(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                self.env.pop(stmt.target.id, None)
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.Return):
+            self.eval(stmt.value)
+        elif isinstance(stmt, (ast.If,)):
+            self.eval(stmt.test)
+            self.run_branches(stmt.body, stmt.orelse)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.run_for(stmt)
+        elif isinstance(stmt, ast.While):
+            self.eval(stmt.test)
+            self.run_loop_body(stmt.body)
+            self.run_stmts(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.eval(item.context_expr)
+            self.run_stmts(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run_stmts(stmt.body)
+            saved = {n: dataclasses.replace(e, elems=dict(e.elems))
+                     for n, e in self.env.items()}
+            for h in stmt.handlers:
+                self.env = {n: dataclasses.replace(e, elems=dict(e.elems))
+                            for n, e in saved.items()}
+                self.run_stmts(h.body)
+            self.env = saved
+            self.run_stmts(stmt.orelse)
+            self.run_stmts(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.local_defs[stmt.name] = stmt
+            # analyzed standalone by the rule driver; also available for
+            # HOF-body checks at use sites
+        elif isinstance(stmt, ast.ClassDef):
+            pass                       # methods analyzed standalone
+        elif isinstance(stmt, (ast.Assert, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.eval(child)
+            if isinstance(stmt, ast.Delete):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.env.pop(t.id, None)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc:
+                self.eval(stmt.exc)
+        # Import/Global/Pass/etc: nothing to do
+
+    @staticmethod
+    def _terminates(body: Sequence[ast.stmt]) -> bool:
+        return bool(body) and isinstance(
+            body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+    def _copy_env(self) -> Dict[str, KeyEntry]:
+        return {n: dataclasses.replace(e, elems=dict(e.elems))
+                for n, e in self.env.items()}
+
+    def run_branches(self, body: Sequence[ast.stmt],
+                     orelse: Sequence[ast.stmt]):
+        base = self._copy_env()
+        self.run_stmts(body)
+        body_env, body_term = self.env, self._terminates(body)
+        self.env = {n: dataclasses.replace(e, elems=dict(e.elems))
+                    for n, e in base.items()}
+        self.run_stmts(orelse)
+        else_env, else_term = self.env, self._terminates(orelse)
+        if body_term and not else_term:
+            self.env = else_env
+        elif else_term and not body_term:
+            self.env = body_env
+        else:
+            # MUST-consumed merge: consumed only when consumed on BOTH
+            # live paths (zero-false-positive bias)
+            merged: Dict[str, KeyEntry] = {}
+            for name in set(body_env) & set(else_env):
+                a, b = body_env[name], else_env[name]
+                e = dataclasses.replace(a, elems=dict(a.elems))
+                e.state = min(a.state, b.state)
+                e.elems = {i: min(a.elems.get(i, _FRESH),
+                                  b.elems.get(i, _FRESH))
+                           for i in set(a.elems) | set(b.elems)}
+                merged[name] = e
+            self.env = merged
+
+    def run_for(self, stmt: ast.For):
+        iter_val = self.eval(stmt.iter)
+        self.run_loop_body(stmt.body, target=stmt.target,
+                           target_val=iter_val)
+        self.run_stmts(stmt.orelse)
+
+    def run_loop_body(self, body: Sequence[ast.stmt],
+                      target: Optional[ast.AST] = None,
+                      target_val: _Value = _OTHER):
+        self.loop_depth += 1
+        for _pass in range(2):
+            if target is not None:
+                # loop target rebinds fresh each iteration; iterating a
+                # key array yields fresh keys
+                if target_val.kind == "keys":
+                    self.bind(target, _Value("key", target_val.split_src),
+                              target)
+                elif isinstance(target, (ast.Tuple, ast.List)):
+                    for elt in target.elts:
+                        kind = _OTHER
+                        if isinstance(elt, ast.Name) and (
+                                _KEY_NAME.match(elt.id)):
+                            kind = _Value("key")
+                        self.bind(elt, kind, target)
+                elif isinstance(target, ast.Name) and \
+                        _KEY_NAME.match(target.id):
+                    self.bind(target, _Value("key"), target)
+                else:
+                    self.bind(target, _OTHER, target)
+            self.run_stmts(body)
+        self.loop_depth -= 1
+
+    # -- entry -------------------------------------------------------------
+    def run_function(self, fn: Union[ast.FunctionDef,
+                                     ast.AsyncFunctionDef]):
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if _KEY_NAME.match(a.arg):
+                self.env[a.arg] = KeyEntry(kind="key")
+            elif _KEYS_NAME.match(a.arg):
+                self.env[a.arg] = KeyEntry(kind="keys")
+        self.run_stmts(fn.body)
+
+    def run_module(self, tree: ast.Module):
+        self.run_stmts(tree.body)
+
+
+class KeyDisciplineRule(Rule):
+    id = "KEY-REUSE"          # also emits KEY-CHAIN
+    severity = Severity.ERROR
+    doc = ("a PRNG key consumed twice without an intervening split/fold_in "
+           "(KEY-REUSE, error), or carried/serially-chained through a "
+           "Python loop (KEY-CHAIN, warn)")
+
+    def run(self, src: SourceFile):
+        findings: List[Finding] = []
+        # module top level
+        mod = _FuncAnalyzer(self, src)
+        mod.run_module(src.tree)
+        findings.extend(mod.findings)
+        # every function, independently (params seeded by name)
+        for fn in _walk_defs(src.tree):
+            an = _FuncAnalyzer(self, src)
+            an.run_function(fn)
+            findings.extend(an.findings)
+        return findings
+
+
+def _walk_defs(tree: ast.AST):
+    """Every def at any nesting depth, each analyzed exactly once."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# KEY-SHARD — shard-invariant seeds inside shard_map bodies
+# ---------------------------------------------------------------------------
+
+
+class ShardSeedRule(Rule):
+    id = "KEY-SHARD"
+    severity = Severity.ERROR
+    doc = ("PRNG keys built inside a shard_map-mapped function from seeds "
+           "with no axis_index dependence — every shard draws the same "
+           "keys (the PR 4 cross-shard collision)")
+
+    def run(self, src: SourceFile):
+        findings: List[Finding] = []
+        defs = {fn.name: fn for fn in _walk_defs(src.tree)}
+        for call in ast.walk(src.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            if not dotted(call.func).endswith("shard_map"):
+                continue
+            if not call.args:
+                continue
+            mapped = call.args[0]
+            body_fn = None
+            if isinstance(mapped, ast.Lambda):
+                body_fn = mapped
+            elif isinstance(mapped, ast.Name) and mapped.id in defs:
+                body_fn = defs[mapped.id]
+            if body_fn is None:
+                continue
+            findings.extend(self._check_body(src, body_fn))
+        return findings
+
+    def _check_body(self, src: SourceFile, fn):
+        body = [fn.body] if isinstance(fn, ast.Lambda) else fn.body
+        # taint: names (transitively) derived from axis_index
+        tainted: Set[str] = set()
+        assigns = [s for s in ast.walk(fn) if isinstance(s, ast.Assign)]
+        changed = True
+        while changed:
+            changed = False
+            for s in assigns:
+                if self._expr_tainted(s.value, tainted):
+                    for t in s.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name) and \
+                                    n.id not in tainted:
+                                tainted.add(n.id)
+                                changed = True
+        findings = []
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            ftext = ast.unparse(call.func)
+            if not re.search(r"random\.(PRNGKey|key)\b", ftext):
+                continue
+            args = list(call.args) + [k.value for k in call.keywords]
+            if any(self._expr_tainted(a, tainted) for a in args):
+                continue
+            findings.append(self.finding(
+                src, call.lineno,
+                "PRNG key built inside a shard_map body from a seed with "
+                "no axis_index dependence — identical keys on every shard",
+                "offset the seed by jax.lax.axis_index(<mesh axis>) (see "
+                "core/distributed.py client_seeds)"))
+        return findings
+
+    @staticmethod
+    def _expr_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call) and \
+                    dotted(n.func).endswith("axis_index"):
+                return True
+            if isinstance(n, ast.Name) and n.id in tainted:
+                return True
+        return False

@@ -1,0 +1,128 @@
+"""Runtime sanitizer: debug_nans/debug_infs + a PRNG key-reuse tracer.
+
+``sanitize()`` is the opt-in runtime companion to the static KEY-REUSE
+rule: inside the context, ``jax.config`` flips ``jax_debug_nans`` /
+``jax_debug_infs`` on (every jitted computation re-checks its outputs),
+and the consuming ``jax.random`` entry points (``split`` + the samplers)
+are wrapped to fingerprint each *concrete* key they receive and raise
+:class:`KeyReuseError` the second time the same key material is consumed.
+
+Semantics match the static rule: ``split`` and samplers consume;
+``fold_in`` / ``PRNGKey`` / ``key`` / ``key_data`` do not.  Keys that are
+tracers (inside jit/vmap) are skipped — they have no concrete material to
+fingerprint; the static dataflow rule covers traced code.  Two distinct
+``PRNGKey(0)`` objects share a fingerprint on purpose: identical key
+material means identical sample streams, which is exactly the hazard.
+
+Exposed as the ``sanitized`` pytest fixture (tests/conftest.py) and
+``benchmarks/run.py --sanitize``.  Deliberate same-stream comparisons
+(run A vs run B with one key) should call ``state.reset()`` between the
+runs instead of suppressing the whole check.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterator, Optional, Set
+
+# consuming entry points wrapped on the jax.random module
+_CONSUMING = (
+    "split", "normal", "uniform", "bernoulli", "categorical", "choice",
+    "permutation", "shuffle", "gamma", "beta", "dirichlet", "exponential",
+    "gumbel", "laplace", "logistic", "poisson", "rademacher", "randint",
+    "truncated_normal", "multivariate_normal", "t", "cauchy", "maxwell",
+    "ball", "orthogonal", "binomial", "bits",
+)
+
+
+class KeyReuseError(RuntimeError):
+    """The same concrete PRNG key material was consumed twice."""
+
+
+@dataclasses.dataclass
+class SanitizerState:
+    # strict=False records reuse in ``n_errors`` without raising — the
+    # benchmark lane (run.py --sanitize) uses it to *count* replays
+    # (including deliberate, statically-suppressed ones) as a metric
+    strict: bool = True
+    consumed: Dict[bytes, str] = dataclasses.field(default_factory=dict)
+    n_checked: int = 0
+    n_skipped_tracer: int = 0
+    n_errors: int = 0
+
+    def reset(self) -> None:
+        """Forget consumption history (for deliberate same-key replays)."""
+        self.consumed.clear()
+
+    def check(self, fn_name: str, key) -> None:
+        import jax
+        import numpy as np
+        if isinstance(key, jax.core.Tracer):
+            self.n_skipped_tracer += 1
+            return
+        try:
+            if jax.dtypes.issubdtype(getattr(key, "dtype", None),
+                                     jax.dtypes.prng_key):
+                data = jax.random.key_data(key)
+            else:
+                data = key
+            arr = np.asarray(jax.device_get(data))
+        except Exception:   # non-key-like arg (e.g. shuffle on plain array)
+            return
+        if arr.dtype != np.uint32 or arr.ndim > 1:
+            # batched key arrays consume elementwise under vmap; only
+            # single keys are fingerprinted here
+            return
+        fp = arr.tobytes()
+        self.n_checked += 1
+        prev = self.consumed.get(fp)
+        if prev is not None:
+            self.n_errors += 1
+            if self.strict:
+                raise KeyReuseError(
+                    f"PRNG key consumed twice: jax.random.{fn_name} "
+                    f"received key material already consumed by "
+                    f"jax.random.{prev} — split/fold_in first "
+                    f"(state.reset() for deliberate same-stream replays)")
+        self.consumed[fp] = fn_name
+
+
+@contextlib.contextmanager
+def sanitize(nans: bool = True, infs: bool = True,
+             key_reuse: bool = True,
+             strict: bool = True) -> Iterator[SanitizerState]:
+    """Context manager arming debug_nans/debug_infs + the key tracer."""
+    import jax
+    import jax.random as jrandom
+
+    state = SanitizerState(strict=strict)
+    saved_cfg = {}
+    for flag, on in (("jax_debug_nans", nans), ("jax_debug_infs", infs)):
+        saved_cfg[flag] = getattr(jax.config, flag)
+        if on:
+            jax.config.update(flag, True)
+
+    saved_fns = {}
+    if key_reuse:
+        def make(name, orig):
+            def wrapped(key, *args, **kwargs):
+                # inspect-then-forward: the wrapper is transparent, the
+                # one real consumption happens in orig
+                state.check(name, key)
+                return orig(key, *args, **kwargs)  # lint: disable=KEY-REUSE
+            wrapped.__name__ = f"sanitized_{name}"
+            wrapped.__wrapped__ = orig
+            return wrapped
+        for name in _CONSUMING:
+            orig = getattr(jrandom, name, None)
+            if orig is None or hasattr(orig, "__wrapped__"):
+                continue
+            saved_fns[name] = orig
+            setattr(jrandom, name, make(name, orig))
+    try:
+        yield state
+    finally:
+        for name, orig in saved_fns.items():
+            setattr(jrandom, name, orig)
+        for flag, val in saved_cfg.items():
+            jax.config.update(flag, val)

@@ -1,0 +1,133 @@
+"""WIRE-CONTRACT: the wire layout agrees *by construction*, not convention.
+
+The paper's comm accounting (Eqs. 9-11) is exact only while three things
+stay one definition: the field order (``gmm.WIRE_FIELDS``), the packed
+covariance shape (``gmm.packed_cov_shape`` / ``tril_pack``), and the byte
+length the codec actually produces (``ClientMessage.comm_bytes ==
+len(payload) == gmm.comm_bytes``).  This rule imports the live modules
+and re-verifies each identity on real round trips, per cov type:
+
+* ``fl.api._GMM_FIELDS`` must BE ``gmm.WIRE_FIELDS`` (object identity —
+  a copied tuple can silently drift on the next edit);
+* an encoded GMM message's params hold exactly the wire fields;
+* ``_pack_cov`` output shape equals ``packed_cov_shape`` for every cov
+  type, and tril_pack/tril_unpack round-trip;
+* encode → decode → re-encode is byte-identical (the codec is a true
+  fixed-point after one quantization);
+* ``msg.comm_bytes == len(msg.payload) == gmm.comm_bytes(...)`` for the
+  message's (cov_type, d, K, C) — the accounting can't drift from the
+  bytes.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.analysis.core import Finding, SemanticRule, Severity, SourceFile
+
+
+def _line_of(src: SourceFile, needle: str) -> int:
+    for i, line in enumerate(src.text.splitlines(), start=1):
+        if needle in line:
+            return i
+    return 1
+
+
+class WireContractRule(SemanticRule):
+    id = "WIRE-CONTRACT"
+    severity = Severity.ERROR
+    doc = ("ClientMessage fields, WIRE_FIELDS and packed_cov_shape agree "
+           "by construction (identity + live round trips per cov type)")
+    anchors = ("repro/fl/api.py", "repro/core/gmm.py")
+
+    def run_project(self, files: Sequence[SourceFile]):
+        api_src = next((f for f in files if f.path.replace("\\", "/")
+                        .endswith("repro/fl/api.py")), None)
+        gmm_src = next((f for f in files if f.path.replace("\\", "/")
+                        .endswith("repro/core/gmm.py")), None)
+        src = api_src or gmm_src
+        if src is None:
+            return []
+        findings: List[Finding] = []
+
+        def flag(anchor_src, needle, msg, hint):
+            findings.append(self.finding(
+                anchor_src, _line_of(anchor_src, needle), msg, hint))
+
+        import numpy as np
+        from repro.core import gmm as G
+        from repro.fl import api as FA
+
+        if FA._GMM_FIELDS is not G.WIRE_FIELDS and api_src is not None:
+            flag(api_src, "_GMM_FIELDS",
+                 "fl.api._GMM_FIELDS is not gmm.WIRE_FIELDS (object "
+                 "identity) — a copied layout tuple can drift",
+                 "alias it: _GMM_FIELDS = G.WIRE_FIELDS")
+
+        rng = np.random.RandomState(0)
+        C, K, d = 3, 2, 4
+        for cov_type in ("full", "diag", "spherical"):
+            if cov_type == "full":
+                a = rng.randn(C, K, d, d).astype(np.float32)
+                cov = a @ a.transpose(0, 1, 3, 2) + d * np.eye(
+                    d, dtype=np.float32)
+            elif cov_type == "diag":
+                cov = rng.rand(C, K, d).astype(np.float32) + 0.5
+            else:
+                cov = rng.rand(C, K).astype(np.float32) + 0.5
+            packed = FA._pack_cov(cov, cov_type)
+            want = (C,) + G.packed_cov_shape(cov_type, K, d)
+            if tuple(packed.shape) != want and src is not None:
+                flag(src, "_pack_cov",
+                     f"_pack_cov({cov_type}) produced shape "
+                     f"{tuple(packed.shape)} but packed_cov_shape says "
+                     f"{want} — the accounting and the bytes disagree",
+                     "make both delegate to gmm.packed_cov_shape")
+            if cov_type == "full":
+                rt = G.tril_unpack(np.asarray(packed, np.float32), d)
+                if not np.allclose(rt, cov, atol=1e-6):
+                    flag(gmm_src or src, "def tril_unpack",
+                         "tril_pack → tril_unpack is not the identity on "
+                         "symmetric matrices",
+                         "one row-major tril layout, one inverse")
+
+            params = {"pi": rng.dirichlet(np.ones(K), C).astype(np.float32),
+                      "mu": rng.randn(C, K, d).astype(np.float32),
+                      "cov": cov}
+            counts = np.array([5, 0, 7][:C], np.int64)
+            codec = FA.QuantizedCodec("bfloat16")
+            msg = FA.encode_message(params, counts, (0.0,) * C, kind="gmm",
+                                    cov_type=cov_type, n_classes=C,
+                                    codec=codec)
+            if set(msg.params) != set(G.WIRE_FIELDS):
+                flag(api_src or src, "class ClientMessage",
+                     f"GMM ClientMessage params {sorted(msg.params)} != "
+                     f"WIRE_FIELDS {sorted(G.WIRE_FIELDS)}",
+                     "the message pytree must carry exactly the wire "
+                     "fields")
+            Cp = int(np.sum(counts > 0))
+            expected = G.comm_bytes(cov_type, d, K, Cp,
+                                    codec.bytes_per_scalar)
+            if not (msg.comm_bytes == len(msg.payload) == expected):
+                flag(api_src or src, "def comm_bytes",
+                     f"[{cov_type}] comm accounting drift: "
+                     f"msg.comm_bytes={msg.comm_bytes}, "
+                     f"len(payload)={len(msg.payload)}, "
+                     f"gmm.comm_bytes={expected}",
+                     "comm_bytes must equal the real payload length "
+                     "(Eqs. 9-11)")
+            # quantize→dequantize fixed point: re-encoding the decoded
+            # params must reproduce the payload byte-for-byte.  The wire
+            # carries present classes only; params scatter back to C rows.
+            pr = np.asarray(msg.header.present, np.int64)
+            sub = {"pi": np.asarray(msg.params["pi"])[pr],
+                   "mu": np.asarray(msg.params["mu"])[pr],
+                   "cov": FA._pack_cov(np.asarray(msg.params["cov"])[pr],
+                                       cov_type)}
+            re_encoded = codec.encode(sub, FA._GMM_FIELDS)
+            if re_encoded != msg.payload:
+                flag(api_src or src, "def encode",
+                     f"[{cov_type}] encode(decode(payload)) != payload — "
+                     "the codec is not a fixed point after one "
+                     "quantization",
+                     "decode must dequantize exactly what encode wrote")
+        return findings

@@ -508,7 +508,10 @@ def synthesize_chunks(key, batch: Dict[str, jax.Array], counts,
             # data-parallel server phase: each device samples its share of
             # the bucket's slots (mesh mode, DESIGN.md §5)
             slots, stacks = _shard_bucket(mesh, slots, stacks)
-        samples = _sample_stacked(key, slots, *stacks,
+        # the shared key is deliberate: _sample_stacked folds it per
+        # GLOBAL slot id, so draws are bucket-partition-invariant and
+        # never collide across buckets (slots are disjoint)
+        samples = _sample_stacked(key, slots, *stacks,  # lint: disable=KEY-CHAIN
                                   b.S, cov_type)               # (G_b, S, d)
         samples = samples[: len(b.slots)]   # drop _shard_bucket's padding
         # compact away the padding rows host-side: one gather per bucket

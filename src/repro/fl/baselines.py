@@ -95,10 +95,15 @@ def fedbe(key, heads: Sequence[Dict], n_samples: int = 15) -> List[Dict]:
     mean = avg_heads(heads)
     var = jax.tree.map(
         lambda *xs: jnp.var(jnp.stack(xs), axis=0) + 1e-8, *heads)
+    leaves, treedef = jax.tree.flatten(mean)
     samples = []
     for k in jax.random.split(key, n_samples):
-        eps = jax.tree.map(
-            lambda m: jax.random.normal(k, m.shape, jnp.float32), mean)
+        # one key per leaf — a single k across the tree.map would draw the
+        # same noise stream for every leaf (KEY-REUSE)
+        leaf_keys = jax.random.split(k, len(leaves))
+        eps = jax.tree.unflatten(treedef, [
+            jax.random.normal(lk, leaf.shape, jnp.float32)
+            for lk, leaf in zip(leaf_keys, leaves)])
         samples.append(jax.tree.map(
             lambda m, v, e: m + jnp.sqrt(v) * e, mean, var, eps))
     return list(heads) + samples
@@ -187,8 +192,11 @@ def fedavg(key, client_datasets: Sequence[Tuple], n_classes: int,
             up + head_comm_bytes(d, n_classes, cfg.bytes_per_scalar))
 
     history = []
+    # pre-split per-round keys: serially re-splitting the carried key made
+    # every round's draws depend on how many rounds ran before it (KEY-CHAIN)
+    round_keys = jax.random.split(key, cfg.rounds)
     for r in range(cfg.rounds):
-        key, *ks = jax.random.split(key, len(client_datasets) + 1)
+        ks = jax.random.split(round_keys[r], len(client_datasets))
         deltas = []
         for k, (f, y) in zip(ks, client_datasets):
             local = local_train(k, global_head, f, y, n_classes,

@@ -100,15 +100,17 @@ class BatchedServer:
         self.positions = self.positions + jnp.asarray(
             [r is not None for r in self.active], jnp.int32)
         self.last_tok = nxt[:, None, None]
+        # one batched device→host transfer per step, not one per slot
+        nxt_h, pos_h = jax.device_get((nxt, self.positions))
         n_active = 0
         for i, r in enumerate(self.active):
             if r is None:
                 continue
-            tok = int(nxt[i])
+            tok = int(nxt_h[i])
             r.out.append(tok)
             if (len(r.out) >= r.max_new
                     or tok == self.scfg.eos_id
-                    or int(self.positions[i]) >= self.scfg.max_seq - 1):
+                    or int(pos_h[i]) >= self.scfg.max_seq - 1):
                 r.done = True
                 self.active[i] = None
             else:

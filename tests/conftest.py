@@ -18,3 +18,14 @@ def rng():
 @pytest.fixture()
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def sanitized():
+    """Arm debug_nans/debug_infs + the PRNG key-reuse tracer
+    (repro.analysis.sanitize) for one test.  Deliberate same-stream
+    replays call ``sanitized.reset()`` between the runs."""
+    from repro.analysis import sanitize
+
+    with sanitize() as state:
+        yield state

@@ -1,0 +1,13 @@
+"""Synthetic HOST-SYNC positive: float()/np.asarray on traced values
+inside a jitted function.  Path-gated — the test loads this file under a
+synthetic repro/core/ path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def hot(x):
+    y = jnp.sum(x)
+    scale = float(y)
+    return scale * jnp.asarray(np.asarray(x))

@@ -1,0 +1,10 @@
+"""Synthetic HOST-SYNC negative: only static quantities (shapes) are
+converted; values stay on device."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hot(x):
+    scale = float(x.shape[0])
+    return scale * jnp.sum(x)

@@ -1,0 +1,11 @@
+"""Synthetic CHURN-INLINE-JIT positive: jax.jit constructed inside the
+loop body — a fresh callable (empty compile cache) every pass."""
+import jax
+
+
+def sweep(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2.0)
+        out.append(f(x))
+    return out

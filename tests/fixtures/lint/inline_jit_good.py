@@ -1,0 +1,8 @@
+"""Synthetic CHURN-INLINE-JIT negative: the jitted callable is hoisted
+above the loop, so its compile cache is shared across passes."""
+import jax
+
+
+def sweep(xs):
+    f = jax.jit(lambda v: v * 2.0)
+    return [f(x) for x in xs]

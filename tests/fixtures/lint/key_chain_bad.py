@@ -1,0 +1,12 @@
+"""Synthetic KEY-CHAIN positive: the key is re-split serially every
+iteration (the carry is a child of its own split)."""
+import jax
+
+
+def rounds(key, n):
+    out = []
+    for _ in range(n):
+        keys = jax.random.split(key, 3)
+        key = keys[0]
+        out.append(jax.random.normal(keys[1], (4,)))
+    return out

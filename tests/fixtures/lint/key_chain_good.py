@@ -1,0 +1,11 @@
+"""Synthetic KEY-CHAIN negative: per-iteration keys via fold_in of a
+stable id — nothing is carried or re-split."""
+import jax
+
+
+def rounds(key, n):
+    out = []
+    for r in range(n):
+        kr = jax.random.fold_in(key, r)
+        out.append(jax.random.normal(kr, (4,)))
+    return out

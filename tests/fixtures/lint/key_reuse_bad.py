@@ -1,0 +1,8 @@
+"""Synthetic KEY-REUSE positive: two samplers on one key."""
+import jax
+
+
+def draw(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)
+    return a + b

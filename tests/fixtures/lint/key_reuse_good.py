@@ -1,0 +1,9 @@
+"""Synthetic KEY-REUSE negative: split before each draw."""
+import jax
+
+
+def draw(key, shape):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, shape)
+    b = jax.random.uniform(kb, shape)
+    return a + b

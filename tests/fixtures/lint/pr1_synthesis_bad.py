@@ -1,0 +1,22 @@
+"""PR 1 historical bug (fedpft.synthesize pre-e4b9e40): the loop carry is
+``keys[0]`` — a child of its own split — so each client re-splits a key
+derived from the previous split.  Serial key chains degrade stream
+independence; expected finding: KEY-CHAIN."""
+import jax
+import jax.numpy as jnp
+
+
+def synthesize(key, messages, cov_type):
+    all_feats, all_labels = [], []
+    for msg in messages:
+        C = len(msg.counts)
+        keys = jax.random.split(key, C + 1)
+        key = keys[0]
+        for c in range(C):
+            n = int(msg.counts[c])
+            if n <= 0:
+                continue
+            s = sample(keys[c + 1], msg.gmms, n, cov_type)  # noqa: F821
+            all_feats.append(s)
+            all_labels.append(jnp.full((n,), c, jnp.int32))
+    return jnp.concatenate(all_feats), jnp.concatenate(all_labels)

@@ -1,0 +1,20 @@
+"""Fixed form of pr1_synthesis_bad: each client folds a stable id into
+the round key, so streams are independent and no key is ever carried
+through the loop.  Expected: clean."""
+import jax
+import jax.numpy as jnp
+
+
+def synthesize(key, messages, cov_type):
+    all_feats, all_labels = [], []
+    for mi, msg in enumerate(messages):
+        C = len(msg.counts)
+        keys = jax.random.split(jax.random.fold_in(key, mi), C)
+        for c in range(C):
+            n = int(msg.counts[c])
+            if n <= 0:
+                continue
+            s = sample(keys[c], msg.gmms, n, cov_type)  # noqa: F821
+            all_feats.append(s)
+            all_labels.append(jnp.full((n,), c, jnp.int32))
+    return jnp.concatenate(all_feats), jnp.concatenate(all_labels)

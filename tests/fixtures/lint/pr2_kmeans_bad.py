@@ -1,0 +1,13 @@
+"""PR 2 historical bug (gmm._kmeans_init pre-568a7d7): ``choice`` and
+``normal`` both draw from the same key, so the jitter is correlated with
+the seed selection.  Expected finding: KEY-REUSE."""
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_init(key, x, weights, K):
+    p = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    idx = jax.random.choice(key, x.shape[0], (K,), p=p, replace=True)
+    mu = x[idx]
+    mu = mu + 1e-3 * jax.random.normal(key, mu.shape, x.dtype)
+    return mu

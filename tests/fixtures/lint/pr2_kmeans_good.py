@@ -1,0 +1,13 @@
+"""Fixed form of pr2_kmeans_bad: one split, one key per draw.
+Expected: clean."""
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_init(key, x, weights, K):
+    k_idx, k_jitter = jax.random.split(key)
+    p = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    idx = jax.random.choice(k_idx, x.shape[0], (K,), p=p, replace=True)
+    mu = x[idx]
+    mu = mu + 1e-3 * jax.random.normal(k_jitter, mu.shape, x.dtype)
+    return mu

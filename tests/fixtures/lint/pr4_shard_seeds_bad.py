@@ -1,0 +1,22 @@
+"""PR 4 historical bug (distributed.fedpft_transfer pre-568a7d7): inside
+a shard_map-mapped function, per-client keys are built from
+``arange(I_local) + seed`` with no axis_index dependence — every shard
+draws the identical key set, so "independent" clients on different
+shards share RNG streams.  Expected finding: KEY-SHARD."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def fedpft_transfer(mesh, feats, labels, n_classes, cfg, seed=0):
+    def local(f, y):
+        I_local = f.shape[0]
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(I_local, dtype=jnp.uint32) + jnp.uint32(seed))
+        packed, counts = jax.vmap(fit_client)(keys, f, y)  # noqa: F821
+        return packed, counts
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=(P(), P()), check_rep=False)(feats, labels)

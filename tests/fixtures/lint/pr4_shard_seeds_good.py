@@ -1,0 +1,22 @@
+"""Fixed form of pr4_shard_seeds_bad: seeds are offset by
+``axis_index("data") * I_local`` so they are globally unique across the
+mesh.  Expected: clean."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def fedpft_transfer(mesh, feats, labels, n_classes, cfg, seed=0):
+    def local(f, y):
+        I_local = f.shape[0]
+        shard = jax.lax.axis_index("data").astype(jnp.uint32)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(I_local, dtype=jnp.uint32)
+            + shard * jnp.uint32(I_local) + jnp.uint32(seed))
+        packed, counts = jax.vmap(fit_client)(keys, f, y)  # noqa: F821
+        return packed, counts
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=(P(), P()), check_rep=False)(feats, labels)

@@ -1,0 +1,16 @@
+"""Synthetic CHURN-STATIC positives: static_argnames naming a parameter
+that does not exist (silently ignored by jax), and a static parameter
+defaulting to a mutable literal (unhashable at the first call)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def run(x, steps):
+    return x * steps
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def run2(x, opts=[]):
+    return x

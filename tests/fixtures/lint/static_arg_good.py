@@ -1,0 +1,15 @@
+"""Synthetic CHURN-STATIC negative: static names match real parameters
+and the default is hashable."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def run(x, steps):
+    return x * steps
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def run2(x, opts=()):
+    return x

@@ -133,16 +133,21 @@ class TestWireCodec:
 
 class TestBatchedSynthesis:
     @pytest.mark.parametrize("cov", ["full", "diag", "spher"])
-    def test_matches_looped_reference(self, key, dataset, cov):
+    def test_matches_looped_reference(self, key, dataset, cov, sanitized):
         """One jitted batched sample ≡ the per-(client, class) loop: same
-        per-class sample counts, matching class-conditional statistics."""
+        per-class sample counts, matching class-conditional statistics.
+        Runs under the runtime sanitizer (nan/inf checks + key tracer);
+        the batched-vs-looped comparison deliberately replays one key, so
+        history is reset between the runs."""
         x, y, *_ = dataset
         gmms, counts, _ = G.fit_classwise_gmms(
             key, x, y, N_CLASSES,
             G.GMMConfig(n_components=2, cov_type=cov, n_iter=10))
         batch = jax.tree.map(lambda a: jnp.stack([a, a]), gmms)
         cnt2 = np.stack([np.asarray(counts)] * 2).astype(np.int64)
+        sanitized.reset()
         fb, yb = FA.synthesize_batched(key, batch, cnt2, cov)
+        sanitized.reset()
         fl, yl = FA.synthesize_looped(key, batch, cnt2, cov)
         assert fb.shape == fl.shape
         np.testing.assert_array_equal(np.sort(np.asarray(yb)),
@@ -338,9 +343,11 @@ class TestMeshMode:
         labels = jnp.asarray(y[: n_clients * N]).reshape(n_clients, N)
         return feats, labels
 
-    def test_run_sharded_accounts_the_mesh_wire(self, key, dataset):
+    def test_run_sharded_accounts_the_mesh_wire(self, key, dataset,
+                                                sanitized):
         """The 1-shard mesh session reports comm_bytes == Σ len(payload)
-        == Eqs. 9-11 — the mesh path and the codec share one layout."""
+        == Eqs. 9-11 — the mesh path and the codec share one layout.
+        Runs under the runtime sanitizer (nan/inf + key-reuse tracer)."""
         feats, labels = self._cohort(dataset)
         sess = _gmm_session(shards=1, synthesis="streamed")
         res = sess.run_sharded(key, feats, labels)
