@@ -40,6 +40,29 @@ def main(quick: bool = False):
                f"distinct_jaxprs={rep['distinct_jaxprs']};"
                f"errors={rep['errors']}")
 
+    # live AOT-cache exercise (ISSUE 8): warm a 2-signature grid, restream
+    # it, and emit the hit/miss counters — the CACHE-KEY rule proves the
+    # keys are stable statically; this row proves the cache converges live
+    from repro.core.head import HeadConfig
+    from repro.launch.aot_cache import ProgramCache, canonical_grid
+    cache = ProgramCache(max_entries=8)
+    grid = canonical_grid(C=4, d=16, Ms=(4,), Ks=(2,),
+                          cov_types=("diag", "spher"))
+    cfg = HeadConfig(n_steps=8)
+    t0 = time.time()
+    cache.warmup(grid, cfg)
+    for sig in grid * 3:          # restream: every get must hit
+        cache.get(sig, cfg)
+    st = cache.stats()
+    C.emit("analysis/aot_cache", (time.time() - t0) * 1e6,
+           f"entries={st['entries']};hits={st['hits']};"
+           f"misses={st['misses']};compiles={st['compiles']};"
+           f"jit_fallbacks={st['jit_fallbacks']}",
+           extra={"hits": st["hits"], "misses": st["misses"],
+                  "compiles": st["compiles"],
+                  "evictions": st["evictions"],
+                  "jit_fallbacks": st["jit_fallbacks"]})
+
 
 if __name__ == "__main__":
     main()

@@ -19,32 +19,46 @@ from repro.models import model as M
 
 ROWS: List[str] = []
 PEAK_BYTES: Dict[str, int] = {}   # name → peak resident bytes, when tracked
+EXTRA: Dict[str, Dict[str, float]] = {}   # name → extra numeric fields
 
 
 def emit(name: str, us_per_call: float, derived: str,
-         peak_bytes: int = None):
+         peak_bytes: int = None, extra: Dict[str, float] = None):
     """One benchmark row.  ``peak_bytes`` (memory-law benches: fl.ingest)
-    rides along into the ``--json`` record next to ``us_per_call``."""
+    and ``extra`` (numeric side-channels: AOT-cache hit/miss counters,
+    compile-vs-steady splits) ride along into the ``--json`` record next
+    to ``us_per_call``."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     if peak_bytes is not None:
         PEAK_BYTES[name] = int(peak_bytes)
+    if extra:
+        EXTRA[name] = {k: float(v) for k, v in extra.items()}
     print(row, flush=True)
 
 
-def write_json(path: str):
+def write_json(path: str, merge: bool = False):
     """Dump every emitted row as ``{name: us_per_call}`` JSON — the
     machine-readable perf trajectory (``benchmarks.run --json``).  Rows
-    that tracked a memory peak become ``{name: {"us_per_call": …,
-    "peak_bytes": …}}`` objects; plain rows stay floats, so existing
-    trajectory tooling keeps parsing untouched benches."""
+    that tracked a memory peak or extra numerics become ``{name:
+    {"us_per_call": …, "peak_bytes": …, …}}`` objects; plain rows stay
+    floats, so existing trajectory tooling keeps parsing untouched
+    benches.  ``merge=True`` folds the rows into whatever ``path``
+    already holds (standalone lanes — ``fedpft_dryrun --json`` — land in
+    the same BENCH_<n>.json as ``benchmarks.run``)."""
     import json
+    import os
     data = {}
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
     for row in ROWS:
         name, us, _ = row.split(",", 2)
+        fields = dict(EXTRA.get(name, {}))
         if name in PEAK_BYTES:
-            data[name] = {"us_per_call": float(us),
-                          "peak_bytes": PEAK_BYTES[name]}
+            fields["peak_bytes"] = PEAK_BYTES[name]
+        if fields:
+            data[name] = {"us_per_call": float(us), **fields}
         else:
             data[name] = float(us)
     with open(path, "w") as f:

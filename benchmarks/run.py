@@ -26,6 +26,9 @@ JSON so the perf trajectory is machine-readable across PRs.
   ingest_bench      ISSUE 6           100k-client streaming ingestion:
                                       clients/sec folded + peak resident
                                       bytes vs the stacked-cohort cost
+  compile_bench     ISSUE 8           multi-tenant mixed-signature stream:
+                                      cold vs warm AOT round-program cache
+                                      (launch.aot_cache), no-cache contrast
   roofline_report   deliverable (g)   dry-run roofline table
   analysis_gate     ISSUE 7           lint wall time + finding counts +
                                       recompile-churn trace grid
@@ -45,8 +48,8 @@ from benchmarks import common as C
 
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
-           "em_bench", "head_bench", "ingest_bench", "frontier",
-           "roofline_report", "analysis_gate"]
+           "em_bench", "head_bench", "ingest_bench", "compile_bench",
+           "frontier", "roofline_report", "analysis_gate"]
 
 
 def main(argv=None) -> None:

@@ -11,6 +11,12 @@ sample per power-of-two count bucket — ≤ 2·Σcounts draws even under the
 heavy Dirichlet skew here) and trains the global classifier head. One
 round, a fraction of the bytes, near-centralized accuracy.
 
+Serving many federations? Pass `FedSession(program_cache=
+launch.aot_cache.ProgramCache())` to AOT-compile each canonical cohort
+shape once and serve every later round from the executable cache —
+cohorts pad to power-of-two sizes bit-identically, and warm rounds skip
+trace+compile entirely (DESIGN.md §11, benchmarks/compile_bench.py).
+
 Before sending a change, run the repo's own linter (DESIGN.md §10) —
 key discipline, compile churn, kernel + wire contracts:
 

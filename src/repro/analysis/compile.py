@@ -138,6 +138,46 @@ def _sample_stacked_cases():
     return [("slot_64", args, {})]
 
 
+def _round_sigs():
+    """The round program's canonical mini-grid: every layout × a cov-type
+    spread, all at power-of-two M (what launch.aot_cache compiles for)."""
+    from repro.fl.round import CohortSignature
+    return [
+        CohortSignature(M=4, C=8, K=2, d=32, cov_type="diag"),
+        CohortSignature(M=4, C=8, K=2, d=32, cov_type="full"),
+        CohortSignature(M=16, C=8, K=2, d=32, cov_type="spher"),
+        CohortSignature(M=64, C=8, K=2, d=32, cov_type="diag",
+                        dtype="float32", layout="slots"),
+    ]
+
+
+def _round_program_cases():
+    from repro.core.head import HeadConfig
+    from repro.launch.input_specs import round_specs_for
+    cfg = HeadConfig(n_steps=8)
+    return [
+        (f"{s.layout}/{s.cov_type}/M{s.M}", tuple(round_specs_for(s)),
+         {"sig": s, "head_cfg": cfg, "samples_per_class": None})
+        for s in _round_sigs()
+    ]
+
+
+def cache_entry_points() -> List[Entry]:
+    """Entry points served from the AOT executable cache
+    (``launch.aot_cache``) — the CACHE-KEY rule's registry.  A per-case
+    statics factory (``cases()`` kwargs) rebuilds the static values fresh
+    on every call, which is exactly what hash-stability must survive."""
+    return [
+        Entry("fl.round.round_program", "repro/fl/round.py",
+              lambda: _imp("repro.fl.round", "round_program"),
+              _round_program_cases,
+              lambda: {"sig": _round_sigs()[0],
+                       "head_cfg": _imp("repro.core.head", "HeadConfig")(
+                           n_steps=8),
+                       "samples_per_class": None}),
+    ]
+
+
 def entry_points() -> List[Entry]:
     return [
         Entry("kernels.gmm_estep.estep_fused",
@@ -173,6 +213,9 @@ def entry_points() -> List[Entry]:
               lambda: _imp("repro.fl.api", "_sample_stacked"),
               _sample_stacked_cases,
               lambda: {"S": 64, "cov_type": "diag"}),
+        # the AOT-cached round program rides the same double-trace grid —
+        # CHURN-RETRACE guards its jaxpr determinism, CACHE-KEY its keys
+        *cache_entry_points(),
     ]
 
 
@@ -269,4 +312,78 @@ class RetraceRule(SemanticRule):
                         f"canonical grid: {err}",
                         "public jitted entries must trace for every "
                         "canonical shape (launch/input_specs.py)"))
+        return findings
+
+
+class CacheKeyRule(SemanticRule):
+    """CACHE-KEY: invariants the AOT executable cache keys on.
+
+    ``launch.aot_cache.ProgramCache`` keys entries on ``(CohortSignature,
+    HeadConfig, samples_per_class, mesh fingerprint)`` and assumes a key
+    that compares equal ALWAYS maps to one executable.  Two ways that
+    breaks: a static whose hash isn't stable across reconstruction (a
+    dataclass growing an unhashable or identity-hashed field — every
+    request would miss), and a round program whose jaxpr differs between
+    traces of the same abstract inputs (one key, many executables).  Both
+    are checked here on the live modules, per entry in
+    :func:`cache_entry_points`.
+    """
+
+    id = "CACHE-KEY"
+    severity = Severity.ERROR
+    doc = ("an AOT-cached entry point's statics don't hash/compare stably "
+           "across reconstruction, or its jaxpr forks across traces of "
+           "one cache key")
+    anchors = ("repro/fl/round.py", "repro/launch/aot_cache.py")
+
+    def __init__(self, entries: Optional[Sequence[Entry]] = None):
+        self.entries = entries
+
+    def run_project(self, files: Sequence[SourceFile]):
+        findings: List[Finding] = []
+        src = next((f for f in files
+                    if f.path.replace("\\", "/").endswith(self.anchors[0])),
+                   files[0])
+        for entry in (self.entries if self.entries is not None
+                      else cache_entry_points()):
+            # statics rebuilt twice from the factory must be equal AND
+            # hash-equal — the cache-key stability a dict lookup needs
+            try:
+                first, second = entry.statics(), entry.statics()
+            except Exception as e:  # noqa: BLE001 — broken factory gates
+                findings.append(self.finding(
+                    src, 1, f"{entry.name}: statics factory failed ({e})",
+                    "cache_entry_points() statics must construct cleanly"))
+                continue
+            for name in first:
+                try:
+                    stable = (first[name] == second[name]
+                              and hash(first[name]) == hash(second[name]))
+                except TypeError as e:
+                    findings.append(self.finding(
+                        src, 1,
+                        f"{entry.name}: static '{name}' is unhashable "
+                        f"({e}) — it can never key the executable cache",
+                        "make the static a frozen dataclass / tuple"))
+                    continue
+                if not stable:
+                    findings.append(self.finding(
+                        src, 1,
+                        f"{entry.name}: static '{name}' rebuilt from the "
+                        f"same factory compares or hashes unequal — every "
+                        f"request would miss the cache",
+                        "derive __eq__/__hash__ from value fields only "
+                        "(frozen dataclass)"))
+            # one cache key ⇒ one jaxpr: reuse the double-trace machinery
+            _, errors = trace_entry(entry)
+            for case, err in errors:
+                msg = (f"{entry.name}[{case}]: jaxpr diverged across two "
+                       f"traces of one cache key — the cached executable "
+                       f"would not match a fresh compile"
+                       if err == "RETRACE-DIVERGED" else
+                       f"{entry.name}[{case}] failed to trace: {err}")
+                findings.append(self.finding(
+                    src, 1, msg,
+                    "keep round_program's shapes a pure function of "
+                    "CohortSignature"))
         return findings

@@ -142,6 +142,7 @@ def _default_rules() -> List[Rule]:
         hygiene.InlineJitRule(),
         hygiene.StaticArgRule(),
         compile_rules.RetraceRule(),
+        compile_rules.CacheKeyRule(),
         pallas_rules.PallasContractRule(),
         wire.WireContractRule(),
     ]

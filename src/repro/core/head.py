@@ -224,10 +224,16 @@ def train_head_streaming(key, chunks: Sequence[Tuple[jax.Array, jax.Array]],
     return params, jnp.concatenate(losses)
 
 
-@partial(jax.jit, static_argnames=("n_classes", "cfg", "cov_type"))
-def _fused_gmm_scan(key, pi, mu, cov, slot_labels, counts, n_classes: int,
+def fused_gmm_steps(key, pi, mu, cov, slot_labels, counts, n_classes: int,
                     cfg: HeadConfig, cov_type: str):
-    """The whole server phase as ONE device program.
+    """The whole server phase as ONE device program (un-jitted body).
+
+    This is the traceable core shared by :data:`_fused_gmm_scan` (the
+    in-process jit used by :func:`train_head_from_gmms`) and the AOT
+    round program (``fl.round.round_program``) that ``launch.aot_cache``
+    lowers+compiles per canonical cohort signature — one body, so the
+    cached executable is bit-identical to the default path by
+    construction.
 
     Same minibatch law as ``gmm.sample_slot_minibatch`` per step (slot ∝
     counts, component ∝ pi, Gaussian through the precomputed factor), but
@@ -285,6 +291,11 @@ def _fused_gmm_scan(key, pi, mu, cov, slot_labels, counts, n_classes: int,
     if not losses:
         return params, jnp.zeros((0,), jnp.float32)
     return params, jnp.concatenate(losses) if len(losses) > 1 else losses[0]
+
+
+_fused_gmm_scan = partial(jax.jit,
+                          static_argnames=("n_classes", "cfg", "cov_type")
+                          )(fused_gmm_steps)
 
 
 def train_head_from_gmms(key, pi: jax.Array, mu: jax.Array, cov: jax.Array,

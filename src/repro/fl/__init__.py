@@ -14,9 +14,11 @@ payload length ((C·d + C)·bytes_per_scalar, §6.3); multi-round methods pay
 it up+down per round.
 """
 from repro.fl import api, ingest, planner
+from repro.fl import round as round_  # "round" shadows the builtin; alias
 from repro.fl.api import (Chain, ClientMessage, FedSession, GMMSummarizer,
                           HeadSummarizer, QuantizedCodec, Ring, Star,
                           synthesize_batched, synthesize_chunks)
+from repro.fl.round import CohortSignature, round_program
 from repro.fl.baselines import (MultiRoundConfig, avg_heads,
                                 ensemble_predict, fedavg, fedbe,
                                 head_comm_bytes, kd_transfer, local_train)
@@ -29,4 +31,5 @@ __all__ = ["MultiRoundConfig", "fedavg", "local_train", "avg_heads",
            "HeadSummarizer", "QuantizedCodec", "Star", "Chain", "Ring",
            "ClientMessage", "IngestBroker", "IngestConfig", "IngestState",
            "synthesize_batched", "synthesize_chunks", "SlotTable",
-           "SynthesisPlan", "plan_synthesis"]
+           "SynthesisPlan", "plan_synthesis", "CohortSignature",
+           "round_program", "round_"]

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -57,6 +57,7 @@ from repro.core import gmm as G
 from repro.core import head as H
 from repro.fl import ingest as IG
 from repro.fl import planner as P
+from repro.fl import round as FR
 
 __all__ = [
     "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
@@ -725,7 +726,15 @@ class FedSession:
     #              into train_head_streaming — peak O(largest bucket)
     #   "pooled"   the pre-fusion path: synthesize everything, concat, train
     synthesis: str = "fused"
-    stream_synthesis: bool = False  # deprecated alias for synthesis="streamed"
+    # -- AOT round-program cache (DESIGN.md §11) ----------------------------
+    #   a launch.aot_cache.ProgramCache: the fused server phase runs as an
+    #   ahead-of-time compiled round program, cohorts padded to the cache's
+    #   canonical signature grid (bit-identical heads — count-0 identity
+    #   pads are no-ops).  One cache instance serves the host, mesh, and
+    #   ingest paths; hit/miss + amortized latency land in info["compile"].
+    #   Heterogeneous cohorts (mixed K/cov, §6.3) bypass it via the usual
+    #   pooled fallback.
+    program_cache: Optional[Any] = None
     # -- streaming ingestion (DESIGN.md §9) ---------------------------------
     #   IngestConfig routes the server phase through fl.ingest: arriving
     #   messages fold into a fixed-capacity reservoir chunk-at-a-time, so
@@ -822,18 +831,6 @@ class FedSession:
             raise ValueError(
                 f"FedSession: unknown synthesis={self.synthesis!r} — choose "
                 f"one of {SYNTHESIS_MODES}")
-        if self.stream_synthesis:
-            if self.synthesis not in ("fused", "streamed"):
-                raise ValueError(
-                    f"FedSession: stream_synthesis=True (deprecated alias "
-                    f"for synthesis='streamed') contradicts "
-                    f"synthesis={self.synthesis!r} — drop one")
-            warnings.warn(
-                "FedSession(stream_synthesis=True) is deprecated and will "
-                "be removed in a future release — pass "
-                "synthesis='streamed' instead",
-                DeprecationWarning, stacklevel=3)
-            return "streamed"
         return self.synthesis
 
     def _fused_slot_stack(self, messages: Sequence[ClientMessage]):
@@ -848,6 +845,86 @@ class FedSession:
         return fused_slot_stack(stack_messages(messages),
                                 np.stack([m.counts for m in messages]),
                                 self.samples_per_class)
+
+    def _exec_cached(self, prog, hit: bool, sig, canon, info: Dict, args,
+                     mesh=None):
+        """Run one cache entry and fill ``info["compile"]`` (hit/miss,
+        compile vs run vs compile-amortized latency, live cache counters).
+        ``args`` is the round program's positional list ``(key, pi, mu,
+        cov, counts[, slot_labels])``; under a mesh every operand is
+        pinned replicated to match the executable's AOT input shardings."""
+        cache = self.program_cache
+        if mesh is not None:
+            repl = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            args = [a if a is None else jax.device_put(a, repl)
+                    for a in args]
+        t0 = time.perf_counter()
+        head_params, losses = prog(*args)
+        jax.block_until_ready(head_params)
+        run_us = (time.perf_counter() - t0) * 1e6
+        info["compile"] = {
+            "hit": hit, "aot": prog.aot,
+            "signature": dataclasses.astuple(sig),
+            "canonical": dataclasses.astuple(canon),
+            "compile_us": prog.compile_us, "run_us": run_us,
+            # compile cost spread over every round the entry has served —
+            # the multi-tenant metric compile_bench tracks
+            "amortized_us": prog.compile_us / max(prog.uses, 1) + run_us,
+            "cache": cache.stats(),
+        }
+        return head_params, losses
+
+    def _cached_round(self, k_head, messages: Sequence[ClientMessage],
+                      sig, info: Dict, mesh=None) -> SessionResult:
+        """Serve the fused server phase from the AOT round-program cache
+        (DESIGN.md §11): stack the wire tensors, pad the cohort up to the
+        cache's canonical signature (leading ``gmm.identity_gmm`` count-0
+        clients — exact no-ops, so the head is bit-identical to the
+        compacted path), and run the compiled executable."""
+        cache = self.program_cache
+        stack, counts = FR.wire_stack(messages)
+        info["synthesis"] = "fused"
+        n_eff = counts if self.samples_per_class is None else \
+            np.where(counts > 0, self.samples_per_class, 0)
+        if int((n_eff > 0).sum()) == 0:
+            # every class filtered — mirrors the empty-plan guard
+            return self._empty_cohort_result(k_head, info, messages)
+        canon = cache.canonical(sig)
+        stack, counts = FR.pad_cohort(stack, counts, sig, canon)
+        hits0 = cache.hits
+        prog = cache.get(sig, self.head,
+                         samples_per_class=self.samples_per_class,
+                         mesh=mesh)
+        args = [k_head, jnp.asarray(stack["pi"]), jnp.asarray(stack["mu"]),
+                jnp.asarray(stack["cov"]), jnp.asarray(counts), None]
+        head_params, losses = self._exec_cached(
+            prog, cache.hits > hits0, sig, canon, info, args, mesh=mesh)
+        info.update(head_losses=losses)
+        return SessionResult(model=head_params, info=info,
+                             messages=list(messages))
+
+    def _cached_round_from_state(self, k_head, state: "IG.IngestState",
+                                 info: Dict, messages,
+                                 mesh=None) -> SessionResult:
+        """Streaming counterpart of :meth:`_cached_round`: the reservoir's
+        padded stack is already a fixed-shape decoded slot stack
+        (``layout="slots"`` at M = capacity; ``samples_per_class`` was
+        applied at fold time, so the program gets None)."""
+        cache = self.program_cache
+        sig = FR.signature_of_state(state)
+        canon = cache.canonical(sig)
+        pi, mu, cov, slot_labels, slot_counts = FR.pad_slots(
+            *state.padded_stack(), sig, canon)
+        hits0 = cache.hits
+        prog = cache.get(sig, self.head, samples_per_class=None, mesh=mesh)
+        args = [k_head, jnp.asarray(pi), jnp.asarray(mu), jnp.asarray(cov),
+                jnp.asarray(slot_counts), jnp.asarray(slot_labels)]
+        head_params, losses = self._exec_cached(
+            prog, cache.hits > hits0, sig, canon, info, args, mesh=mesh)
+        info.update(head_losses=losses)
+        return SessionResult(model=head_params, info=info,
+                             messages=list(messages))
 
     def _empty_cohort_result(self, k_head, info: Dict, messages,
                              d: Optional[int] = None) -> SessionResult:
@@ -877,6 +954,9 @@ class FedSession:
         """Fused head training on the reservoir's fixed-shape padded stack
         — the streaming counterpart of the ``mode == "fused"`` branch of
         :meth:`server_aggregate`; compile key = capacity, not M."""
+        if self.program_cache is not None:
+            return self._cached_round_from_state(k_head, state, info,
+                                                 messages, mesh=mesh)
         pi, mu, cov, slot_labels, slot_counts = state.padded_stack()
         pi, mu, cov = jnp.asarray(pi), jnp.asarray(mu), jnp.asarray(cov)
         slot_labels = jnp.asarray(slot_labels)
@@ -932,6 +1012,14 @@ class FedSession:
         if kind == "gmm":
             mode = self._synthesis_mode()
             k_syn, k_head = jax.random.split(key)
+            if mode == "fused" and self.program_cache is not None:
+                try:
+                    sig = FR.signature_of(messages)
+                except ValueError:
+                    sig = None   # heterogeneous (§6.3): pooled fallback below
+                if sig is not None:
+                    return self._cached_round(k_head, messages, sig, info,
+                                              mesh=mesh)
             fused = None
             if mode == "fused":
                 fused = self._fused_slot_stack(messages)

@@ -8,23 +8,66 @@ a 16-shard data mesh and compare the all-gather bytes in the compiled HLO
 against the paper's communication-cost formulas (and against shipping raw
 features).
 
-    PYTHONPATH=src python -m repro.launch.fedpft_dryrun
+:func:`measure` splits what the old dry-run conflated: **compile** time
+(``lower()`` + ``compile()``, what a cold cohort signature pays in the
+request path — the cost ``launch.aot_cache`` amortizes), **first-call**
+time (executable load + arg placement), and **steady-state** time (best
+of ``n_exec`` repeat calls — the warm round).  Rows land in
+``benchmarks.common`` so ``--json BENCH_<n>.json`` (merge mode) records
+the compile trajectory next to the main benchmark lane:
+
+    PYTHONPATH=src python -m repro.launch.fedpft_dryrun [--json PATH]
 """
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distributed as DF
 from repro.core import gmm as G
 from repro.launch.hlo_cost import HloCost
 
 
-def measure(fn, *args):
-    lowered = jax.jit(fn).lower(*args)
-    compiled = lowered.compile()
+def measure(fn, abstract_args, concrete_args=None, n_exec: int = 3):
+    """Compile-vs-execute split for one jitted program.
+
+    ``abstract_args`` (ShapeDtypeStructs) drive ``lower()+compile()``;
+    ``concrete_args`` (real arrays, optional) drive one timed first call
+    and ``n_exec`` steady-state repeats.  Returns ``{"compile_us",
+    "first_us", "steady_us", "coll"}`` — execute fields are NaN in
+    lower-only mode (no concrete args), keeping the dry-run usable on
+    hardware the host can't execute for.
+    """
+    t0 = time.perf_counter()
+    compiled = jax.jit(fn).lower(*abstract_args).compile()
+    compile_us = (time.perf_counter() - t0) * 1e6
     cost = HloCost(compiled.as_text()).total()
-    return cost.coll
+    first_us = steady_us = float("nan")
+    if concrete_args is not None:
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*concrete_args))
+        first_us = (time.perf_counter() - t0) * 1e6
+        reps = []
+        for _ in range(n_exec):
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(*concrete_args))
+            reps.append((time.perf_counter() - t0) * 1e6)
+        steady_us = min(reps)
+    return {"compile_us": compile_us, "first_us": first_us,
+            "steady_us": steady_us, "coll": cost.coll}
+
+
+def _emit(name: str, us: float, derived: str, extra=None):
+    """Route rows through benchmarks.common when importable (repo-root
+    runs) so --json lands in the shared trajectory; print-only otherwise."""
+    try:
+        from benchmarks import common as C
+    except ImportError:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        return
+    C.emit(name, us, derived, extra=extra)
 
 
 def main(argv=None):
@@ -35,6 +78,12 @@ def main(argv=None):
     ap.add_argument("--classes", type=int, default=8)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--cov", default="diag", choices=G.COV_TYPES)
+    ap.add_argument("--lower-only", action="store_true",
+                    help="skip execution (compile + HLO cost only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge the emitted rows into PATH "
+                         "(benchmarks.common.write_json merge mode, e.g. "
+                         "the current BENCH_<n>.json)")
     args = ap.parse_args(argv)
 
     mesh = jax.make_mesh((16,), ("data",))
@@ -43,20 +92,34 @@ def main(argv=None):
     cfg = G.GMMConfig(n_components=K, cov_type=args.cov, n_iter=5)
     feats = jax.ShapeDtypeStruct((I, N, d), jnp.float32)
     labels = jax.ShapeDtypeStruct((I, N), jnp.int32)
+    concrete = None
+    if not args.lower_only:
+        rng = np.random.default_rng(0)
+        concrete = (jnp.asarray(rng.normal(size=(I, N, d)).astype(np.float32)),
+                    jnp.asarray(rng.integers(0, C, (I, N)).astype(np.int32)))
 
     with mesh:
-        coll_pft = measure(
-            lambda f, y: DF.fedpft_transfer(mesh, f, y, C, cfg), feats,
-            labels)
-        coll_raw = measure(
-            lambda f, y: DF.raw_feature_transfer(mesh, f, y), feats, labels)
+        pft = measure(lambda f, y: DF.fedpft_transfer(mesh, f, y, C, cfg),
+                      (feats, labels), concrete)
+        raw = measure(lambda f, y: DF.raw_feature_transfer(mesh, f, y),
+                      (feats, labels), concrete)
 
     # per-shard all-gather operand = its own clients' wire pytree
     per_shard_clients = I // 16
     pred_pft = DF.expected_wire_bytes(args.cov, d, K, C, per_shard_clients)
     pred_raw = per_shard_clients * N * d * 2 + per_shard_clients * N * 4
-    ag_pft = coll_pft["all-gather"]
-    ag_raw = coll_raw["all-gather"]
+    ag_pft = pft["coll"]["all-gather"]
+    ag_raw = raw["coll"]["all-gather"]
+    for tag, m, ag, pred in (("fedpft", pft, ag_pft, pred_pft),
+                             ("raw", raw, ag_raw, pred_raw)):
+        _emit(f"fedpft_dryrun/{tag}/compile", m["compile_us"],
+              f"all_gather_bytes={ag:.0f};predicted={pred}",
+              extra={"first_us": m["first_us"],
+                     "steady_us": m["steady_us"]})
+        _emit(f"fedpft_dryrun/{tag}/steady", m["steady_us"],
+              f"first_us={m['first_us']:.1f};"
+              f"compile_over_steady="
+              f"{m['compile_us']/max(m['steady_us'], 1e-9):.1f}x")
     print(f"FedPFT  transfer: all_gather={ag_pft:>12.0f} B   "
           f"Eqs.9-11 predict {pred_pft:>12d} B   "
           f"ratio={ag_pft/max(pred_pft,1):.3f}")
@@ -66,6 +129,9 @@ def main(argv=None):
     print(f"→ parametric transfer moves {ag_raw/max(ag_pft,1):.1f}× fewer "
           f"bytes over the mesh than raw features "
           f"(N={N}/client; grows linearly with N).")
+    if args.json:
+        from benchmarks import common as C
+        C.write_json(args.json, merge=True)
     return 0
 
 

@@ -43,13 +43,16 @@ def make_sim_mesh(n: int):
         raise ValueError(f"make_sim_mesh: need n >= 1 shards, got {n}")
     devs = jax.devices()
     if n > len(devs):
+        # the copy-pasteable fix, as ONE unbroken token — tests assert the
+        # exact string so message rewording can never lose the flag value
+        hint = f"XLA_FLAGS=--xla_force_host_platform_device_count={n}"
         raise ValueError(
             f"make_sim_mesh({n}): this host exposes only {len(devs)} "
-            f"device(s). Simulate more with XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={n} set BEFORE jax "
-            "initializes — tests/conftest.py deliberately leaves the host "
-            "at its real count, so the multidevice lane spawns a fresh "
-            "subprocess (tests/_spawn.py) with the flag set.")
+            f"device(s). Simulate more by setting {hint} in the "
+            "environment BEFORE jax initializes — tests/conftest.py "
+            "deliberately leaves the host at its real count, so the "
+            "multidevice lane spawns a fresh subprocess (tests/_spawn.py) "
+            "with the flag set.")
     return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
 
 

@@ -101,12 +101,19 @@ def test_client_axis_mismatch_fails_fast():
 
 def test_make_sim_mesh_is_actionable_when_devices_missing():
     """The 1-CPU pytest host can't build a 2-shard sim mesh — the error
-    must say how to launch the multidevice lane, not just fail."""
+    must carry the EXACT copy-pasteable fix (flag name AND value), not
+    just point at XLA_FLAGS."""
     from repro.launch.mesh import make_sim_mesh
     if len(jax.devices()) > 1:
         pytest.skip("host already multi-device")
-    with pytest.raises(ValueError, match="xla_force_host_platform"):
+    with pytest.raises(ValueError) as ei:
         make_sim_mesh(2)
+    assert "XLA_FLAGS=--xla_force_host_platform_device_count=2" \
+        in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        make_sim_mesh(7)
+    assert "XLA_FLAGS=--xla_force_host_platform_device_count=7" \
+        in str(ei.value)
     assert make_sim_mesh(1).shape["data"] == 1
 
 

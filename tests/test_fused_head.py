@@ -252,19 +252,17 @@ class TestSessionFusedDefault:
         acc_p = float(H.accuracy(res_p.model, xt, yt))
         assert acc_f > 0.6 and abs(acc_f - acc_p) < 0.1, (acc_f, acc_p)
 
-    def test_stream_synthesis_alias_maps_to_streamed(self, key):
-        sess = self._session(stream_synthesis=True)
-        with pytest.deprecated_call(match="synthesis='streamed'"):
-            assert sess._synthesis_mode() == "streamed"
-        sess = self._session(synthesis="streamed")
-        assert sess._synthesis_mode() == "streamed"
+    def test_stream_synthesis_alias_is_gone(self, key):
+        """The PR-6 deprecation alias was removed: synthesis='streamed' is
+        the one spelling, and the old kwarg fails loudly at construction."""
+        assert self._session(synthesis="streamed")._synthesis_mode() \
+            == "streamed"
+        with pytest.raises(TypeError, match="stream_synthesis"):
+            self._session(stream_synthesis=True)
 
     def test_invalid_synthesis_mode_raises(self, key):
         with pytest.raises(ValueError, match="synthesis"):
             self._session(synthesis="bogus")._synthesis_mode()
-        with pytest.raises(ValueError, match="contradicts"):
-            self._session(synthesis="pooled",
-                          stream_synthesis=True)._synthesis_mode()
 
     def test_heterogeneous_cohort_falls_back_to_pooled(self, key):
         """Mixed-K cohorts (paper §6.3) can't stack into one slot tensor —

@@ -202,7 +202,7 @@ class TestSessionIntegration:
             head=H.HeadConfig(n_steps=250, lr=3e-3), **kw)
 
     @pytest.mark.slow
-    def test_stream_synthesis_matches_pooled_session(self, key):
+    def test_streamed_synthesis_matches_pooled_session(self, key):
         clients, xt, yt = self._clients(key)
         res_pool = self._session().run(key, clients)
         res_stream = self._session(synthesis="streamed").run(key, clients)
