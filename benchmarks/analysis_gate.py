@@ -30,6 +30,14 @@ def main(quick: bool = False):
     C.emit("analysis/semantic", (time.time() - t0) * 1e6,
            f"findings={len(sem_f)};gating={len(gating(sem_f))}")
 
+    # the serving layer holds the same bar on its own row (ISSUE 9) —
+    # `python -m repro.analysis src/repro/serve` must gate clean
+    t0 = time.time()
+    srv_f = analyze_paths([str(ROOT / "src" / "repro" / "serve")],
+                          semantic=False)
+    C.emit("analysis/serve_lint", (time.time() - t0) * 1e6,
+           f"findings={len(srv_f)};gating={len(gating(srv_f))}")
+
     # the retrace grid is cheap (~1.5 s) — always emit it so every
     # BENCH_<n>.json tracks jaxpr stability
     del quick

@@ -29,6 +29,9 @@ JSON so the perf trajectory is machine-readable across PRs.
   compile_bench     ISSUE 8           multi-tenant mixed-signature stream:
                                       cold vs warm AOT round-program cache
                                       (launch.aot_cache), no-cache contrast
+  serve_bench       ISSUE 9           FedPFT-as-a-service: rps + p50/p99
+                                      per traffic class under a ≥1000-
+                                      request mixed extract/infer stream
   roofline_report   deliverable (g)   dry-run roofline table
   analysis_gate     ISSUE 7           lint wall time + finding counts +
                                       recompile-churn trace grid
@@ -49,7 +52,7 @@ from benchmarks import common as C
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
            "em_bench", "head_bench", "ingest_bench", "compile_bench",
-           "frontier", "roofline_report", "analysis_gate"]
+           "serve_bench", "frontier", "roofline_report", "analysis_gate"]
 
 
 def main(argv=None) -> None:

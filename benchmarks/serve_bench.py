@@ -1,0 +1,124 @@
+"""ISSUE 9: FedPFT-as-a-service under a heavy synthetic request stream.
+
+Drives :class:`repro.serve.service.FedPFTService` — the one-process
+extract → ingest → train → infer loop — with thousands of synthetic
+concurrent clients and reports requests/sec and p50/p99 latency per
+traffic class, plus the warm AOT close-round latency.  The stream is
+mixed-length (every power-of-two bucket exercised) and, after the first
+round, mixed-class (extraction for round 2 interleaved with inference
+against the round-1 head through the shared slot pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+
+
+def _latency_row(name: str, reqs) -> None:
+    lat = np.asarray([r.t_done - r.t_submit for r in reqs])
+    span = (max(r.t_done for r in reqs) - min(r.t_submit for r in reqs))
+    rps = len(reqs) / span if span > 0 else float("inf")
+    p50, p99 = (float(np.percentile(lat, q) * 1e6) for q in (50, 99))
+    C.emit(name, float(lat.mean() * 1e6),
+           f"n={len(reqs)};rps={rps:.1f};p50={p50:.0f}us;p99={p99:.0f}us",
+           extra={"n": len(reqs), "rps": rps, "p50_us": p50, "p99_us": p99})
+
+
+def main(quick: bool = False):
+    from repro.configs import get_config
+    from repro.core import gmm as G
+    from repro.fl.api import FedSession, GMMSummarizer
+    from repro.fl.ingest import IngestConfig
+    from repro.launch.aot_cache import ProgramCache
+    from repro.models import model as M
+    from repro.serve.service import FedPFTService, ServiceConfig
+
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b").reduced(n_layers=1, d_model=64),
+        dtype="float32", remat=False)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    n_classes = 8
+    sess = FedSession(
+        n_classes=n_classes,
+        summarizer=GMMSummarizer(G.GMMConfig(2, "diag")),
+        ingest=IngestConfig(capacity=64, chunk_size=16),
+        program_cache=ProgramCache())
+    svc = FedPFTService(cfg, params, sess,
+                        ServiceConfig(n_slots=16, max_seq=32, min_bucket=8))
+    rng = np.random.default_rng(0)
+
+    def prompt():
+        return rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 32)))
+
+    # -- warmup: round program + every feature bucket out of the path ----
+    t0 = time.time()
+    svc.warmup(d=cfg.d_model)
+    for L in (8, 16, 32):       # drain per bucket: prime each compile
+        svc.submit_extract(rng.integers(1, cfg.vocab_size, size=L))
+        svc.drain()
+    svc.completed["extract"].clear()    # warmup rows don't skew the stats
+    C.emit("serve/warmup", (time.time() - t0) * 1e6,
+           f"feature_compiles={svc.feature_compiles()};"
+           f"program_compiles={sess.program_cache.compiles}")
+
+    # -- round 1: pure extraction traffic (prefill-heavy) -----------------
+    M_clients = 6 if quick else 40
+    n_per = 8 if quick else 16
+    reqs = {c: [svc.submit_extract(prompt()) for _ in range(n_per)]
+            for c in range(M_clients)}
+    svc.drain()
+    round1 = [r for rs in reqs.values() for r in rs]
+    _latency_row("serve/extract_round1", round1)
+
+    key = jax.random.PRNGKey(7)
+    keys = jax.random.split(key, M_clients + 1)
+    t0 = time.time()
+    for c in range(M_clients):
+        feats = jnp.stack([jnp.asarray(r.feats) for r in reqs[c]])
+        labels = jnp.asarray(rng.integers(0, n_classes, size=n_per))
+        svc.submit_update(c, sess.client_update(keys[1 + c], feats,
+                                                labels, c))
+    fit_us = (time.time() - t0) * 1e6
+    C.emit("serve/client_updates", fit_us / M_clients,
+           f"clients={M_clients};"
+           f"clients_per_s={M_clients / (fit_us / 1e6):.1f}")
+
+    misses0 = sess.program_cache.misses
+    (_, close_us) = C.timed(svc.close_round, keys[0])
+    st = sess.program_cache.stats()
+    C.emit("serve/close_round_warm", close_us,
+           f"new_misses={st['misses'] - misses0};hits={st['hits']}",
+           extra={"hits": st["hits"], "misses": st["misses"],
+                  "compiles": st["compiles"]})
+
+    # -- round 2: mixed extract + infer through the shared pool -----------
+    n_ext2 = 40 if quick else 240
+    n_inf = 60 if quick else 400
+    ext2, inf = [], []
+    for i in range(max(n_ext2, n_inf)):
+        if i < n_ext2:
+            ext2.append(svc.submit_extract(prompt()))
+        if i < n_inf:
+            inf.append(svc.submit_infer(prompt()))
+    svc.drain()
+    _latency_row("serve/mixed_extract", ext2)
+    _latency_row("serve/mixed_infer", inf)
+
+    total = len(round1) + len(ext2) + len(inf)
+    stats = svc.stats()
+    C.emit("serve/stream_total", 0.0,
+           f"requests={total};steps={stats['steps']};"
+           f"feature_compiles={stats['feature_compiles']}",
+           extra={"requests": total, "steps": stats["steps"],
+                  "feature_compiles": stats["feature_compiles"]})
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,12 @@ shape once and serve every later round from the executable cache —
 cohorts pad to power-of-two sizes bit-identically, and warm rounds skip
 trace+compile entirely (DESIGN.md §11, benchmarks/compile_bench.py).
 
+Serving the whole loop? `examples/fedpft_service.py` runs FedPFT as a
+service: backbone feature extraction and head classification share one
+continuous-batching slot pool, GMM messages stream through the ingest
+broker, and `close_round` trains the served head through the warm AOT
+cache (DESIGN.md §12, benchmarks/serve_bench.py).
+
 Before sending a change, run the repo's own linter (DESIGN.md §10) —
 key discipline, compile churn, kernel + wire contracts:
 

@@ -1000,6 +1000,32 @@ class FedSession:
         return self._train_from_state(k_head, state, info, messages,
                                       mesh=mesh)
 
+    def aggregate_from_broker(self, key, broker,
+                              info: Optional[Dict] = None) -> SessionResult:
+        """Close an externally-owned :class:`~repro.fl.ingest.IngestBroker`
+        and train the head from its reservoir.
+
+        The serving loop (``serve.service.FedPFTService``) feeds wire
+        messages into a broker as clients submit them; at round close it
+        hands the broker here.  Key plumbing matches
+        :meth:`_ingest_aggregate` / :meth:`_run_streaming` — ``_, k_head =
+        split(key)`` — so a service round is bit-identical to the offline
+        session given the same admitted cohort and the same ``key``.
+        """
+        self._check_ingest_mode()
+        state = broker.close()
+        _, k_head = jax.random.split(key)
+        base: Dict = {"synthesis": "fused"}
+        if info:
+            base.update(info)
+        base["ingest"] = broker.accounting()
+        base.setdefault("comm_bytes",
+                        broker.admitted_bytes + broker.late_bytes)
+        if state is None or len(state.slot_table()) == 0:
+            return self._empty_cohort_result(k_head, base, [],
+                                             d=broker.header_d)
+        return self._train_from_state(k_head, state, base, messages=[])
+
     def server_aggregate(self, key, messages: Sequence[ClientMessage],
                          mesh=None) -> SessionResult:
         if not messages:
@@ -1227,14 +1253,8 @@ class FedSession:
             comm += msg.comm_bytes
             broker.submit(i, msg)
             del msg
-        state = broker.close()
-        _, k_head = jax.random.split(keys[0])
-        info: Dict = {"comm_bytes": comm, "synthesis": "fused",
-                      "ingest": broker.accounting()}
-        if state is None or len(state.slot_table()) == 0:
-            return self._empty_cohort_result(k_head, info, [],
-                                             d=broker.header_d)
-        return self._train_from_state(k_head, state, info, messages=[])
+        return self.aggregate_from_broker(keys[0], broker,
+                                          info={"comm_bytes": comm})
 
     # -- entry point --------------------------------------------------------
 

@@ -33,7 +33,7 @@ from repro.fl import round as FR
 from repro.launch import input_specs as IS
 
 __all__ = ["CachedProgram", "ProgramCache", "canonical_grid",
-           "mesh_fingerprint"]
+           "serving_grid", "mesh_fingerprint"]
 
 
 def mesh_fingerprint(mesh) -> Optional[Tuple]:
@@ -221,3 +221,22 @@ def canonical_grid(C: int, d: int, Ms: Sequence[int] = (4, 16, 64),
     return [FR.CohortSignature(M=m, C=C, K=k, d=d, cov_type=cov,
                                dtype=dt, layout=layout)
             for m in Ms for k in Ks for cov in cov_types for dt in dtypes]
+
+
+def serving_grid(capacity: int, C: int, K: int, d: int,
+                 cov_types: Sequence[str] = ("diag",)
+                 ) -> List[FR.CohortSignature]:
+    """The signatures a streaming-ingest service will actually request.
+
+    The broker's reservoir always closes at its fixed ``capacity`` in the
+    float32 ``"slots"`` layout (``signature_of_state``), so the warm set is
+    exactly one canonical signature per covariance type — warm these at
+    boot (``FedPFTService.warmup``) and ``close_round`` never compiles in
+    the request path.  Pass the same ``head_cfg``/``samples_per_class=None``
+    the cached ingest round uses, i.e. ``cache.warmup(serving_grid(...),
+    session.head)``.
+    """
+    M = FR.next_pow2(capacity)
+    return [FR.CohortSignature(M=M, C=C, K=K, d=d, cov_type=cov,
+                               dtype="float32", layout="slots")
+            for cov in cov_types]

@@ -360,8 +360,14 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     return total, {"xent": loss, "aux": aux}
 
 
-def features(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
-    """Mean-pooled final hidden state — the FedPFT foundation feature map."""
+def final_hidden(cfg: ModelConfig, params: Params,
+                 batch: Dict[str, jax.Array]):
+    """Post-norm final hidden states ``(B, S, d)`` — the pooling-free body
+    of :func:`features`.  The serving layer pools these under a length
+    mask (``serve.make_feature_step``) so right-padded batches extract
+    exactly the unpadded features: every decode-capable family is causal
+    (attention) or left-to-right (SSM/hybrid recurrence), so a position's
+    hidden state never depends on later pad tokens."""
     x, positions = _embed_inputs(cfg, params, batch)
     if cfg.family == "ssm":
         state = rwkv_mod.init_rwkv_state(cfg, x.shape[0])
@@ -383,5 +389,10 @@ def features(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
         x, _, _ = _run_transformer(cfg, x, params["blocks"], cache_in,
                                    positions=positions, window=0,
                                    use_cache=False)
-    x = rms_norm(x, params["final_norm"])
+    return rms_norm(x, params["final_norm"])
+
+
+def features(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    """Mean-pooled final hidden state — the FedPFT foundation feature map."""
+    x = final_hidden(cfg, params, batch)
     return jnp.mean(x.astype(jnp.float32), axis=1)

@@ -51,6 +51,96 @@ def make_decode_step(cfg: ModelConfig, window: int = 0) -> Callable:
     return decode
 
 
+def pow2_bucket(n: int, min_bucket: int = 8, max_bucket: int = 256) -> int:
+    """Smallest power-of-two ≥ ``n`` clamped to [min_bucket, max_bucket].
+
+    The serving layer pads prompts to these lengths so a stream of
+    varied-length prompts triggers at most ``log2(max/min)+1`` prefill
+    compiles instead of one per distinct length (the planner's bucketing
+    idiom applied to the compile-key axis)."""
+    if n < 1:
+        raise ValueError(f"pow2_bucket: n={n} — prompts have ≥ 1 token")
+    if n > max_bucket:
+        raise ValueError(f"pow2_bucket: n={n} exceeds max_bucket="
+                         f"{max_bucket} (the cache depth)")
+    b = 1 << (int(n) - 1).bit_length()
+    return min(max(b, min_bucket), max_bucket)
+
+
+def pad_to_bucket(tokens, bucket: int):
+    """Right-pad a ``(B, L)`` token batch with zeros to ``(B, bucket)``.
+
+    Pad token ids never reach the output: causal attention (and the
+    ``kv_valid`` decode mask) hides positions ≥ the real length, and the
+    masked steps below index / pool by the real length only.
+    """
+    L = tokens.shape[-1]
+    if L > bucket:
+        raise ValueError(f"pad_to_bucket: length {L} > bucket {bucket}")
+    if L == bucket:
+        return tokens
+    return jnp.pad(tokens, [(0, 0)] * (tokens.ndim - 1) + [(0, bucket - L)])
+
+
+def make_bucketed_prefill_step(cfg: ModelConfig, max_seq: int,
+                               window: int = 0) -> Callable:
+    """Masked prefill over right-padded prompts (one compile per bucket).
+
+    ``prefill(params, batch, length)`` — ``batch["tokens"]`` is ``(B, S_b)``
+    right-padded to a bucket length, ``length`` the real prompt length
+    (traced scalar, so it is NOT part of the compile key).  Returns the
+    logits at the last *real* token and the primed cache.
+
+    Only valid for attention-cache families with a dense (non-ring) cache:
+    the pad positions' K/V land at cache indices ≥ ``length``, which
+    causal masking hides during prefill and the decode-time ``kv_valid``
+    mask (``kv_pos <= position``) hides afterwards — each decode step
+    overwrites index ``pos`` before attending it.  Recurrent caches
+    (ssm/hybrid) fold every processed token into O(1) state, so pads
+    would corrupt it — callers gate on ``cfg.family`` (see
+    ``BatchedServer``).
+    """
+
+    def prefill(params, batch, length):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        cache = M.init_cache(cfg, B, max_seq, window)
+        S = batch["tokens"].shape[1]
+        n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
+        logits, _, cache = M.forward(
+            cfg, params, batch, cache=cache,
+            positions=jnp.arange(S + n_img), window=window, use_cache=True)
+        last = jax.lax.dynamic_index_in_dim(
+            logits, n_img + length - 1, axis=1, keepdims=False)
+        return last, cache
+
+    return prefill
+
+
+def make_feature_step(cfg: ModelConfig) -> Callable:
+    """Masked FedPFT feature extraction over right-padded token batches.
+
+    ``feats(params, tokens, length)`` — ``tokens`` is ``(B, S_b)``
+    right-padded, ``length`` a ``(B,)`` vector of real lengths.  Returns
+    the ``(B, d_model)`` mean-pooled final hidden state over the real
+    positions only: exactly ``model.features`` on the unpadded sequence,
+    because every decode-capable family is causal/left-to-right so pad
+    positions never influence real ones.  Rows with ``length == 0``
+    (admission padding in the service's fixed-batch step) return zeros.
+    """
+    assert cfg.has_decode, (
+        f"{cfg.name} is encoder-only: bidirectional attention mixes pad "
+        "positions into real ones — serve unpadded batches instead")
+
+    def feats(params, tokens, length):
+        h = M.final_hidden(cfg, params, {"tokens": tokens})
+        mask = jnp.arange(h.shape[1])[None, :] < length[:, None]
+        w = mask.astype(jnp.float32)[..., None]
+        return jnp.sum(h.astype(jnp.float32) * w, axis=1) / jnp.maximum(
+            length[:, None].astype(jnp.float32), 1.0)
+
+    return feats
+
+
 def make_encode_step(cfg: ModelConfig) -> Callable:
     """Encoder-only 'serving': one full bidirectional encode."""
 

@@ -37,6 +37,7 @@ class ServerConfig:
     max_seq: int = 256
     window: int = 0
     eos_id: int = -1              # -1: never stop early
+    min_bucket: int = 8           # smallest padded prefill length
 
 
 class BatchedServer:
@@ -54,39 +55,75 @@ class BatchedServer:
         self.positions = jnp.zeros((B,), jnp.int32)    # next position
         self.last_tok = jnp.zeros((B, 1, 1), jnp.int32)  # per-slot (1,1)
         self.active: List[Optional[Request]] = [None] * B
+        # device-side occupancy, updated only at submit/free — step() never
+        # rebuilds it from the Python slot list (host→device churn).
+        self.active_mask = jnp.zeros((B,), jnp.bool_)
+        self.admitted_order: List[int] = []   # rids in admission order
 
         from repro import serve as _serve
-        prefill1 = _serve.make_prefill_step(cfg, S, window=scfg.window)
+        self._serve = _serve
+        # Padded-prompt prefill needs a dense attention cache: pads park in
+        # masked-out cache rows there, but would corrupt ssm/hybrid O(1)
+        # recurrent state or a window>0 ring buffer. Fall back to
+        # exact-length prefill (one compile per distinct length) otherwise.
+        self.bucketed = (scfg.window == 0
+                         and cfg.family in ("dense", "moe", "vlm"))
+        if self.bucketed:
+            self._prefill = jax.jit(
+                _serve.make_bucketed_prefill_step(cfg, S, window=scfg.window))
+        else:
+            self._prefill = jax.jit(
+                _serve.make_prefill_step(cfg, S, window=scfg.window))
         decode1 = _serve.make_decode_step(cfg, window=scfg.window)
-        self._prefill = jax.jit(prefill1)
 
         def decode_slot(params, cache, tok, pos):
             return decode1(params, cache, tok, pos)
         self._decode_all = jax.jit(jax.vmap(
             decode_slot, in_axes=(None, 0, 0, 0)))
 
+    def prefill_compiles(self) -> int:
+        """Number of compiled prefill variants (bounded by #buckets)."""
+        return self._prefill._cache_size()
+
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
     def submit(self, req: Request) -> bool:
-        """Admit a request into a free slot (prefill now). False if full."""
+        """Admit a request (prefill now). False if no slot is free.
+
+        The prefill itself generates the first token, so a request can
+        TERMINATE here — ``max_new=1``, EOS as the first token, or a prompt
+        already at the sequence cap never occupies a decode slot.
+        """
         slots = self.free_slots()
         if not slots:
             return False
         i = slots[0]
-        logits, cache1 = self._prefill(self.params, {
-            "tokens": req.prompt[None, :]})
+        L = req.prompt.shape[0]
+        if self.bucketed:
+            bucket = self._serve.pow2_bucket(
+                L, self.scfg.min_bucket, self.scfg.max_seq)
+            tokens = self._serve.pad_to_bucket(req.prompt[None, :], bucket)
+            logits, cache1 = self._prefill(
+                self.params, {"tokens": tokens}, jnp.asarray(L, jnp.int32))
+        else:
+            logits, cache1 = self._prefill(
+                self.params, {"tokens": req.prompt[None, :]})
+        n_img = self.cfg.n_img_tokens if self.cfg.family == "vlm" else 0
+        first = int(jnp.argmax(logits[0]))
+        req.out.append(first)
+        self.admitted_order.append(req.rid)
+        if (req.max_new <= 1 or first == self.scfg.eos_id
+                or L + n_img >= self.scfg.max_seq):
+            req.done = True           # finished at prefill: slot stays free
+            return True
         self.cache = jax.tree.map(
             lambda all_c, c1: all_c.at[i].set(c1), self.cache, cache1)
-        n_img = self.cfg.n_img_tokens if self.cfg.family == "vlm" else 0
-        self.positions = self.positions.at[i].set(
-            req.prompt.shape[0] + n_img)
-        first = jnp.argmax(logits[0])
-        self.last_tok = self.last_tok.at[i, 0, 0].set(
-            first.astype(jnp.int32))
-        req.out.append(int(first))
+        self.positions = self.positions.at[i].set(L + n_img)
+        self.last_tok = self.last_tok.at[i, 0, 0].set(first)
         self.active[i] = req
+        self.active_mask = self.active_mask.at[i].set(True)
         return True
 
     def step(self) -> int:
@@ -97,9 +134,12 @@ class BatchedServer:
             self.params, self.cache, self.last_tok, self.positions)
         # logits: (slots, 1, V) — per-slot last-token logits
         nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        self.positions = self.positions + jnp.asarray(
-            [r is not None for r in self.active], jnp.int32)
-        self.last_tok = nxt[:, None, None]
+        # free slots keep their positions/last_tok frozen — masked on
+        # device, no per-step Python-list → device transfer.
+        self.positions = self.positions + self.active_mask.astype(jnp.int32)
+        self.last_tok = jnp.where(
+            self.active_mask[:, None, None], nxt[:, None, None],
+            self.last_tok)
         # one batched device→host transfer per step, not one per slot
         nxt_h, pos_h = jax.device_get((nxt, self.positions))
         n_active = 0
@@ -113,6 +153,7 @@ class BatchedServer:
                     or int(pos_h[i]) >= self.scfg.max_seq - 1):
                 r.done = True
                 self.active[i] = None
+                self.active_mask = self.active_mask.at[i].set(False)
             else:
                 n_active += 1
         return n_active

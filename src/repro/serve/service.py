@@ -1,0 +1,287 @@
+"""FedPFT-as-a-service: one process closing the paper's loop (DESIGN.md §12).
+
+The paper's pipeline — foundation-model feature extraction → per-client
+GMM fitting → one-shot transfer → global head (§3, Alg. 1) — runs here as
+a *service*: the backbone is served with continuous batching for
+**extraction** traffic (prefill-heavy: a whole prompt per request),
+clients fit GMMs against those features and submit wire messages through
+the session's :class:`~repro.fl.ingest.IngestBroker`, and once a round
+closes the trained global head serves **inference** traffic (decode-light:
+one masked forward + a head matmul).
+
+Both traffic classes draw from ONE fixed pool of ``n_slots`` batch rows —
+the continuous-batching slot discipline of :class:`serve.server
+.BatchedServer` applied to feature extraction.  Admission is
+traffic-class aware: when both queues are non-empty, extraction is
+guaranteed ``ceil(extract_share · n_slots)`` rows and inference the rest;
+an under-full class backfills the other's rows, so neither class can
+starve the pool.  Every step lowers to the SAME jitted call — a
+``(n_slots, S_bucket)`` masked feature batch — so the compile count is
+bounded by the number of power-of-two prompt buckets, never by traffic.
+
+The round program sits behind the session's
+:class:`~repro.launch.aot_cache.ProgramCache`: :meth:`warmup` pre-compiles
+the one slots-layout signature the broker can close with
+(``aot_cache.serving_grid``), so extract, train, and infer share one warm
+cache and :meth:`close_round` never compiles in the request path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import head as H
+from repro.fl import ingest as IG
+from repro.launch import aot_cache as AC
+from repro.models.config import ModelConfig
+
+EXTRACT = "extract"
+INFER = "infer"
+
+
+@dataclasses.dataclass
+class ServiceRequest:
+    """One request: a token prompt plus its latency lifecycle.
+
+    ``t_submit``/``t_admit``/``t_done`` are clock readings at enqueue,
+    slot admission, and completion — queueing delay and service time are
+    separable in :meth:`FedPFTService.stats`.
+    """
+    rid: int
+    kind: str                      # EXTRACT | INFER
+    tokens: np.ndarray             # (L,) prompt
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+    feats: Optional[np.ndarray] = None   # (d,) — extraction result
+    label: Optional[int] = None          # head argmax — inference result
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    n_slots: int = 8
+    max_seq: int = 64
+    min_bucket: int = 8
+    extract_share: float = 0.5     # guaranteed extract fraction of the pool
+
+    def __post_init__(self):
+        if not 0.0 <= self.extract_share <= 1.0:
+            raise ValueError(f"ServiceConfig: extract_share="
+                             f"{self.extract_share} must be in [0, 1]")
+        if self.n_slots < 1:
+            raise ValueError(f"ServiceConfig: n_slots={self.n_slots}")
+
+
+class FedPFTService:
+    """The serving loop: extract / ingest / train / infer in one process.
+
+    ``session`` must be a ``FedSession(ingest=IngestConfig(...))`` — the
+    session owns the admission policy, reservoir capacity, and (via
+    ``program_cache=``) the AOT round cache; the service adds the
+    request-level slot pool in front and the served head behind.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, session,
+                 scfg: ServiceConfig = ServiceConfig(),
+                 clock=time.perf_counter):
+        if session.ingest is None:
+            raise ValueError(
+                "FedPFTService needs FedSession(ingest=IngestConfig(...)): "
+                "client GMM messages stream through the session's broker — "
+                "an unbounded message list defeats the service memory law")
+        from repro import serve as _serve
+        self.cfg, self.params, self.session, self.scfg = \
+            cfg, params, session, scfg
+        self.clock = clock
+        self._serve = _serve
+        self._feats = jax.jit(_serve.make_feature_step(cfg))
+        self._head_logits = jax.jit(H.head_logits)
+        self.head: Optional[Dict] = None          # installed by close_round
+        self.broker = self._fresh_broker()
+        self.queues: Dict[str, Deque[ServiceRequest]] = {
+            EXTRACT: collections.deque(), INFER: collections.deque()}
+        self.rounds = 0
+        self.steps = 0
+        self._next_rid = 0
+        self.completed: Dict[str, List[ServiceRequest]] = {
+            EXTRACT: [], INFER: []}
+        self.rejected_no_head = 0
+
+    def _fresh_broker(self) -> IG.IngestBroker:
+        return IG.IngestBroker(self.session.ingest, self.session.n_classes,
+                               samples_per_class=self.session
+                               .samples_per_class)
+
+    # -- request ingress ----------------------------------------------------
+
+    def _enqueue(self, kind: str, tokens) -> ServiceRequest:
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 1 or tokens.shape[0] < 1:
+            raise ValueError(f"FedPFTService: prompt must be (L≥1,), got "
+                             f"shape {tokens.shape}")
+        if tokens.shape[0] > self.scfg.max_seq:
+            raise ValueError(f"FedPFTService: prompt length "
+                             f"{tokens.shape[0]} > max_seq "
+                             f"{self.scfg.max_seq}")
+        req = ServiceRequest(rid=self._next_rid, kind=kind, tokens=tokens,
+                             t_submit=self.clock())
+        self._next_rid += 1
+        self.queues[kind].append(req)
+        return req
+
+    def submit_extract(self, tokens) -> ServiceRequest:
+        """Queue a feature-extraction request (a client's raw sample)."""
+        return self._enqueue(EXTRACT, tokens)
+
+    def submit_infer(self, tokens) -> ServiceRequest:
+        """Queue a classification request against the served global head."""
+        if self.head is None:
+            self.rejected_no_head += 1
+            raise RuntimeError(
+                "FedPFTService: no head is being served yet — inference "
+                "opens after the first close_round()")
+        return self._enqueue(INFER, tokens)
+
+    def submit_update(self, client_id: int, message) -> str:
+        """Forward a client's GMM wire message to the round's broker.
+
+        Returns the broker verdict (``admitted``/``late``/``duplicate``/
+        ``over_capacity``) so the client can react.
+        """
+        return self.broker.submit(client_id, message)
+
+    # -- the serving step ---------------------------------------------------
+
+    def _admit(self) -> List[ServiceRequest]:
+        """Pull ≤ n_slots requests across both classes.
+
+        Extraction is guaranteed ``ceil(extract_share · n_slots)`` rows
+        when both queues wait; whatever one class leaves unused, the
+        other backfills — the pool is never idle while work is queued.
+        """
+        B = self.scfg.n_slots
+        ext, inf = self.queues[EXTRACT], self.queues[INFER]
+        if ext and inf:
+            n_ext = min(len(ext),
+                        int(np.ceil(self.scfg.extract_share * B)))
+        else:
+            n_ext = min(len(ext), B)
+        batch = [ext.popleft() for _ in range(n_ext)]
+        batch += [inf.popleft() for _ in range(min(len(inf),
+                                                   B - len(batch)))]
+        while len(batch) < B and ext:          # backfill unused infer rows
+            batch.append(ext.popleft())
+        return batch
+
+    def step(self) -> int:
+        """One serving step: admit, batch, extract, classify.
+
+        Returns the number of requests completed.  The device sees one
+        fixed-shape ``(n_slots, S_bucket)`` call whatever the traffic mix
+        — short rows are right-padded (masked mean ignores pads), unused
+        rows carry length 0 (masked mean returns zeros).
+        """
+        batch = self._admit()
+        if not batch:
+            return 0
+        t_admit = self.clock()
+        B, S = self.scfg.n_slots, self.scfg.max_seq
+        bucket = self._serve.pow2_bucket(
+            max(r.tokens.shape[0] for r in batch),
+            self.scfg.min_bucket, S)
+        tokens = np.zeros((B, bucket), dtype=np.int32)
+        length = np.zeros((B,), dtype=np.int32)
+        for i, r in enumerate(batch):
+            L = r.tokens.shape[0]
+            tokens[i, :L] = r.tokens
+            length[i] = L
+            r.t_admit = t_admit
+        feats = self._feats(self.params, jnp.asarray(tokens),
+                            jnp.asarray(length))
+        infer_rows = [i for i, r in enumerate(batch) if r.kind == INFER]
+        if infer_rows:
+            labels = jnp.argmax(
+                self._head_logits(self.head, feats), axis=-1)
+        feats_h = np.asarray(jax.device_get(feats))
+        labels_h = (np.asarray(jax.device_get(labels))
+                    if infer_rows else None)
+        t_done = self.clock()
+        for i, r in enumerate(batch):
+            if r.kind == EXTRACT:
+                r.feats = feats_h[i]
+            else:
+                r.label = int(labels_h[i])
+            r.t_done, r.done = t_done, True
+            self.completed[r.kind].append(r)
+        self.steps += 1
+        return len(batch)
+
+    def drain(self) -> int:
+        """Step until both queues are empty; returns requests completed."""
+        n = 0
+        while self.queues[EXTRACT] or self.queues[INFER]:
+            n += self.step()
+        return n
+
+    # -- the FL round -------------------------------------------------------
+
+    def close_round(self, key):
+        """Close the broker, train the global head, start serving it.
+
+        Key plumbing is :meth:`FedSession.aggregate_from_broker`'s — the
+        service head is bit-identical to the offline session's on the
+        same admitted cohort.  A fresh broker opens for the next round.
+        """
+        result = self.session.aggregate_from_broker(key, self.broker)
+        self.head = result.model
+        self.broker = self._fresh_broker()
+        self.rounds += 1
+        return result
+
+    def warmup(self, d: int) -> Dict:
+        """Pre-compile the round program for this service's one closing
+        signature (``aot_cache.serving_grid``) — no-op without a
+        ``program_cache`` on the session."""
+        cache = self.session.program_cache
+        if cache is None:
+            return {}
+        summ = self.session.summarizer
+        sigs = AC.serving_grid(self.session.ingest.capacity,
+                               self.session.n_classes,
+                               summ.gmm.n_components, d,
+                               cov_types=(summ.cov_type,))
+        return cache.warmup(sigs, self.session.head)
+
+    # -- introspection ------------------------------------------------------
+
+    def feature_compiles(self) -> int:
+        """Compiled feature-step variants (≤ #prompt buckets)."""
+        return self._feats._cache_size()
+
+    def stats(self) -> Dict:
+        """Throughput + latency per traffic class, broker accounting."""
+        out: Dict = {"steps": self.steps, "rounds": self.rounds,
+                     "rejected_no_head": self.rejected_no_head,
+                     "feature_compiles": self.feature_compiles(),
+                     "ingest": self.broker.accounting()}
+        for kind, reqs in self.completed.items():
+            if not reqs:
+                out[kind] = {"n": 0}
+                continue
+            lat = np.asarray([r.t_done - r.t_submit for r in reqs])
+            span = (max(r.t_done for r in reqs)
+                    - min(r.t_submit for r in reqs))
+            out[kind] = {
+                "n": len(reqs),
+                "rps": len(reqs) / span if span > 0 else float("inf"),
+                "p50_us": float(np.percentile(lat, 50) * 1e6),
+                "p99_us": float(np.percentile(lat, 99) * 1e6),
+            }
+        return out
