@@ -38,6 +38,44 @@ def main(quick: bool = False):
     C.emit("analysis/serve_lint", (time.time() - t0) * 1e6,
            f"findings={len(srv_f)};gating={len(gating(srv_f))}")
 
+    # the fault lane (ISSUE 10): the resilience surface must lint clean
+    # under EXC-SWALLOW — no fault may vanish into a bare except — and a
+    # tiny seeded chaos round must conserve every submitted byte
+    t0 = time.time()
+    flt_f = analyze_paths([str(ROOT / "src" / "repro" / "fl"),
+                           str(ROOT / "src" / "repro" / "serve")],
+                          semantic=False)
+    import numpy as np
+
+    from repro.fl import faults as FJ
+    from repro.fl import ingest as IG
+    from repro.fl.api import FedSession, GMMSummarizer
+    from repro.core import gmm as G
+    import jax as _jax
+    sess = FedSession(n_classes=4,
+                      summarizer=GMMSummarizer(G.GMMConfig(1, "diag",
+                                                           n_iter=4)),
+                      ingest=IG.IngestConfig(capacity=16, chunk_size=4,
+                                             deadline_s=5.0))
+    rng = np.random.default_rng(0)
+    data = [(rng.normal(size=(24, 8)).astype(np.float32),
+             (np.arange(24) % 4).astype(np.int32)) for _ in range(6)]
+    res = sess.run(_jax.random.PRNGKey(0), data,
+                   faults=FJ.FaultPlan(seed=1, drop=0.3, corrupt=0.2,
+                                       straggle=0.2,
+                                       straggle_delay_s=100.0))
+    acct = res.info["ingest"]
+    per = sum(acct[k] for k in ("admitted_bytes", "late_bytes",
+                                "duplicate_bytes", "over_cap_bytes",
+                                "quarantined_bytes", "closed_bytes"))
+    assert per == acct["sent_bytes"], "fault gate: byte law violated"
+    C.emit("analysis/fault_gate", (time.time() - t0) * 1e6,
+           f"findings={len(flt_f)};gating={len(gating(flt_f))};"
+           f"coverage={res.info['faults']['coverage']:.2f};"
+           f"byte_law=ok",
+           extra={"gating": len(gating(flt_f)),
+                  "coverage": res.info["faults"]["coverage"]})
+
     # the retrace grid is cheap (~1.5 s) — always emit it so every
     # BENCH_<n>.json tracks jaxpr stability
     del quick

@@ -1,0 +1,170 @@
+"""ISSUE 10: chaos sweeps over the fault-tolerant federation round.
+
+Two scales, one law.  At the **session** scale, a real feature-task
+cohort runs ``FedSession.run(faults=FaultPlan(...))`` across a drop-rate
+sweep (with corruption and stragglers mixed in) and reports accuracy vs
+coverage — the paper's one-shot head degrades with the surviving cohort
+instead of failing.  At the **wire** scale, a 1000-client fabricated
+cohort is pushed through the acceptance mix (20% drop + 10% corrupt +
+10% straggle) into a deadline broker: zero uncaught exceptions, the
+round closes at the deadline, and Σ per-verdict bytes == Σ sent bytes.
+
+Every sweep closes through the same warm AOT round program — after the
+clean warmup round, the whole chaos grid compiles nothing (asserted via
+``ProgramCache.delta``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+
+N_CLASSES = 8
+D_FEAT = 64
+K = 1
+
+
+def _partition(feats, labels, m):
+    """Round-robin split into m equal clients (same shape → one compile)."""
+    n = (feats.shape[0] // m) * m
+    f = np.asarray(feats[:n]).reshape(m, n // m, -1)
+    y = np.asarray(labels[:n]).reshape(m, n // m)
+    return [(f[i], y[i]) for i in range(m)]
+
+
+def _verdict_str(acct):
+    return (f"admit={acct['admitted']};late={acct['late']};"
+            f"quar={acct['quarantined']};dup={acct['duplicates']};"
+            f"over={acct['over_cap']}")
+
+
+def _assert_byte_law(acct):
+    per = sum(acct[k] for k in ("admitted_bytes", "late_bytes",
+                                "duplicate_bytes", "over_cap_bytes",
+                                "quarantined_bytes", "closed_bytes"))
+    assert per == acct["sent_bytes"], \
+        f"byte conservation violated: {per} != {acct['sent_bytes']}"
+
+
+def main(quick: bool = False):
+    from repro.core import gmm as G
+    from repro.core import head as H
+    from repro.fl import faults as FJ
+    from repro.fl import ingest as IG
+    from repro.fl.api import FedSession, GMMSummarizer, QuantizedCodec, \
+        encode_message
+    from repro.launch.aot_cache import ProgramCache
+
+    # ---- session scale: accuracy vs coverage under a drop sweep --------
+    M_sess = 16 if quick else 64
+    task = C.BenchTask(n_classes=N_CLASSES, n_per_class=64 if quick
+                       else 256, feature_dim=D_FEAT)
+    ftr, ytr, fte, yte = C.make_feature_task(task)
+    clients = _partition(ftr, ytr, M_sess)
+    cache = ProgramCache()
+    sess = FedSession(
+        n_classes=N_CLASSES,
+        summarizer=GMMSummarizer(G.GMMConfig(K, "diag", n_iter=6)),
+        head=H.HeadConfig(n_steps=150, lr=3e-3),
+        ingest=IG.IngestConfig(capacity=M_sess * N_CLASSES,
+                               chunk_size=64, deadline_s=30.0),
+        program_cache=cache)
+    key = jax.random.PRNGKey(0)
+
+    # clean round = warmup: compiles the one closing signature
+    t0 = time.time()
+    res = sess.run(key, clients, faults=FJ.FaultPlan(seed=0))
+    warm_us = (time.time() - t0) * 1e6
+    acc0 = C.accuracy(res.model, fte, yte)
+    C.emit("chaos/clean_warmup", warm_us,
+           f"M={M_sess};acc={acc0:.3f};"
+           f"compiles={cache.stats()['compiles']}",
+           extra={"acc": acc0, "coverage": 1.0})
+
+    before = cache.snapshot()
+    for drop in (0.1, 0.3, 0.5):
+        plan = FJ.FaultPlan(seed=17, drop=drop, corrupt=0.1, straggle=0.1,
+                            straggle_delay_s=1000.0)
+        # one key across the sweep on purpose: identical client messages
+        # make the coverage/accuracy rows comparable round to round
+        (res, us) = C.timed(sess.run, key, clients,  # lint: disable=KEY-REUSE,KEY-CHAIN
+                            faults=plan)
+        acct = res.info["ingest"]
+        _assert_byte_law(acct)
+        faults = res.info["faults"]
+        acc = C.accuracy(res.model, fte, yte)
+        C.emit(f"chaos/drop{int(drop * 100)}", us,
+               f"coverage={faults['coverage']:.2f};acc={acc:.3f};"
+               f"retries={faults['retries']};{_verdict_str(acct)}",
+               extra={"acc": acc, "coverage": faults["coverage"],
+                      "admitted": acct["admitted"],
+                      "quarantined": acct["quarantined"],
+                      "late": acct["late"]})
+    delta = cache.delta(before)
+    assert delta["compiles"] == 0 and delta["misses"] == 0, \
+        f"chaos sweep compiled after warmup: {delta}"
+    C.emit("chaos/sweep_zero_new_compiles", 0.0,
+           f"hits={delta['hits']};compiles={delta['compiles']}",
+           extra=delta)
+
+    # ---- wire scale: the 1000-client acceptance mix --------------------
+    M_wire = 256 if quick else 1000
+    codec = QuantizedCodec("bfloat16")
+    rs = np.random.RandomState(7)
+
+    def fabricate():
+        counts = rs.randint(1, 60, size=N_CLASSES).astype(np.int64)
+        params = {
+            "pi": rs.dirichlet(np.ones(K), size=N_CLASSES)
+            .astype(np.float32),
+            "mu": rs.randn(N_CLASSES, K, D_FEAT).astype(np.float32),
+            "cov": (0.1 + rs.rand(N_CLASSES, K, D_FEAT))
+            .astype(np.float32),
+        }
+        return encode_message(params, counts, np.zeros(1), kind="gmm",
+                              cov_type="diag", n_classes=N_CLASSES,
+                              codec=codec)
+
+    items = [(cid, fabricate()) for cid in range(M_wire)]
+    plan = FJ.FaultPlan(seed=42, drop=0.2, corrupt=0.1, straggle=0.1,
+                        straggle_delay_s=1000.0, arrival_spacing_s=0.01)
+    t = {"now": 0.0}
+    broker = IG.IngestBroker(
+        IG.IngestConfig(capacity=2048, chunk_size=256, deadline_s=5.0),
+        N_CLASSES, clock=lambda: t["now"])
+    t0 = time.time()
+    for ev in FJ.schedule(plan, items):
+        t["now"] = max(t["now"], ev.t)
+        broker.submit(ev.client_id, ev.message)
+    state = broker.close()
+    dt = time.time() - t0
+    acct = broker.accounting()
+    _assert_byte_law(acct)
+    assert broker.closed and acct["late"] > 0, \
+        "deadline never fired — stragglers were admitted"
+    C.emit(f"chaos/wire_M{M_wire}_acceptance_mix", dt / M_wire * 1e6,
+           f"clients_per_sec={M_wire / dt:.0f};{_verdict_str(acct)};"
+           f"sent_kb={C.kb(acct['sent_bytes'])}",
+           extra={"admitted": acct["admitted"], "late": acct["late"],
+                  "quarantined": acct["quarantined"],
+                  "sent_bytes": acct["sent_bytes"]},
+           peak_bytes=acct["peak_resident_bytes"])
+
+    # the degraded reservoir still trains a finite head
+    pi, mu, cov, labels, counts = state.padded_stack()
+    hcfg = H.HeadConfig(n_steps=50 if quick else 150, lr=3e-3)
+    (out, us) = C.timed(H.train_head_from_gmms, jax.random.PRNGKey(1),
+                        pi, mu, cov, labels, counts, N_CLASSES, hcfg,
+                        "diag")
+    head, losses = out
+    assert np.isfinite(np.asarray(head["w"])).all(), \
+        "quarantine leaked non-finite params into the head"
+    C.emit("chaos/head_from_degraded_reservoir", us,
+           f"steps={hcfg.n_steps};final_loss={float(losses[-1]):.4f}")
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -32,6 +32,10 @@ JSON so the perf trajectory is machine-readable across PRs.
   serve_bench       ISSUE 9           FedPFT-as-a-service: rps + p50/p99
                                       per traffic class under a ≥1000-
                                       request mixed extract/infer stream
+  chaos_bench       ISSUE 10          fault-injection sweeps: accuracy vs
+                                      coverage under drop/corrupt/straggle,
+                                      plus the 1000-client wire acceptance
+                                      mix (byte conservation + deadline)
   roofline_report   deliverable (g)   dry-run roofline table
   analysis_gate     ISSUE 7           lint wall time + finding counts +
                                       recompile-churn trace grid
@@ -52,7 +56,8 @@ from benchmarks import common as C
 MODULES = ["comm_cost", "gmm_quality", "topology", "dp_tradeoff",
            "reconstruction", "shifts", "ablations", "synthesize_bench",
            "em_bench", "head_bench", "ingest_bench", "compile_bench",
-           "serve_bench", "frontier", "roofline_report", "analysis_gate"]
+           "serve_bench", "chaos_bench", "frontier", "roofline_report",
+           "analysis_gate"]
 
 
 def main(argv=None) -> None:

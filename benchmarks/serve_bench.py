@@ -119,6 +119,89 @@ def main(quick: bool = False):
            extra={"requests": total, "steps": stats["steps"],
                   "feature_compiles": stats["feature_compiles"]})
 
+    # -- deadline pressure (ISSUE 10): shed + straggle + corrupt ----------
+    _deadline_pressure(cfg, params, quick)
+
+
+def _deadline_pressure(cfg, params, quick: bool):
+    """A round on a fake clock against a hard deadline: on-time clients
+    admit, a corrupt payload quarantines, stragglers go late, extracts
+    inside the guard window shed — and the round still closes on time
+    through the warm program with exact byte attribution."""
+    import dataclasses as _dc
+
+    from repro.core import gmm as G
+    from repro.fl.api import FedSession, GMMSummarizer
+    from repro.fl.ingest import IngestConfig
+    from repro.launch.aot_cache import ProgramCache
+    from repro.serve.service import AdmissionError, FedPFTService, \
+        ServiceConfig
+
+    n_classes = 8
+    t = {"now": 0.0}
+    sess = FedSession(
+        n_classes=n_classes,
+        summarizer=GMMSummarizer(G.GMMConfig(2, "diag")),
+        ingest=IngestConfig(capacity=64, chunk_size=16, deadline_s=30.0),
+        program_cache=ProgramCache())
+    svc = FedPFTService(cfg, params, sess,
+                        ServiceConfig(n_slots=16, max_seq=32,
+                                      deadline_guard_s=5.0),
+                        clock=lambda: t["now"])
+    svc.warmup(d=cfg.d_model)
+    rng = np.random.default_rng(1)
+    M_cl = 4 if quick else 16
+    n_per = 8
+    reqs = {c: [svc.submit_extract(rng.integers(
+        1, cfg.vocab_size, size=int(rng.integers(3, 32))))
+        for _ in range(n_per)] for c in range(M_cl)}
+    svc.drain()
+    key = jax.random.PRNGKey(11)
+    keys = jax.random.split(key, M_cl + 1)
+    msgs = []
+    for c in range(M_cl):
+        feats = jnp.stack([jnp.asarray(r.feats) for r in reqs[c]])
+        labels = jnp.asarray(rng.integers(0, n_classes, size=n_per))
+        msgs.append(sess.client_update(keys[1 + c], feats, labels, c))
+
+    # on-time cohort minus two: one corrupt in flight, one straggler
+    for c in range(M_cl - 2):
+        t["now"] = float(c)
+        assert svc.submit_update(c, msgs[c]) == "admitted"
+    bad = _dc.replace(msgs[M_cl - 2],
+                      payload=msgs[M_cl - 2].payload[:-5])
+    assert svc.submit_update(M_cl - 2, bad) == "quarantined"
+    shed = 0
+    t["now"] = 27.0                        # inside the 5s guard window
+    try:
+        svc.submit_extract(rng.integers(1, cfg.vocab_size, size=8))
+    except AdmissionError:
+        shed = 1
+    assert shed == 1, "guard window failed to shed the doomed extract"
+    t["now"] = 31.0                        # past the deadline
+    assert svc.submit_update(M_cl - 1, msgs[M_cl - 1]) == "late"
+
+    acct = svc.broker.accounting()
+    assert acct["admitted"] == M_cl - 2 and acct["late"] == 1 \
+        and acct["quarantined"] == 1
+    assert acct["admitted_bytes"] + acct["late_bytes"] \
+        + acct["quarantined_bytes"] == acct["sent_bytes"], \
+        "deadline round lost bytes between verdicts"
+
+    misses0 = sess.program_cache.misses
+    (res, close_us) = C.timed(svc.close_round, keys[0])
+    assert sess.program_cache.misses == misses0, \
+        "deadline-pressure close compiled in the request path"
+    assert res.info["faults"]["degraded"]
+    C.emit("serve/deadline_pressure", close_us,
+           f"admitted={acct['admitted']};late={acct['late']};"
+           f"quarantined={acct['quarantined']};"
+           f"shed={svc.stats()['shed_extracts']};"
+           f"coverage={res.info['faults']['coverage']:.2f}",
+           extra={"admitted": acct["admitted"], "late": acct["late"],
+                  "quarantined": acct["quarantined"],
+                  "shed": svc.stats()["shed_extracts"]})
+
 
 if __name__ == "__main__":
     main()

@@ -8,10 +8,10 @@ Runtime: :func:`repro.analysis.sanitize.sanitize`.
 from repro.analysis.core import (Finding, Rule, SemanticRule, Severity,
                                  SourceFile, analyze_paths, gating,
                                  iter_python_files, summarize)
-from repro.analysis.sanitize import KeyReuseError, sanitize
+from repro.analysis.sanitize import (KeyReuseError, reset_active, sanitize)
 
 __all__ = [
     "Finding", "Rule", "SemanticRule", "Severity", "SourceFile",
     "analyze_paths", "gating", "iter_python_files", "summarize",
-    "KeyReuseError", "sanitize",
+    "KeyReuseError", "reset_active", "sanitize",
 ]

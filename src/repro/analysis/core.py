@@ -141,6 +141,7 @@ def _default_rules() -> List[Rule]:
         hygiene.HostSyncRule(),
         hygiene.InlineJitRule(),
         hygiene.StaticArgRule(),
+        hygiene.ExcSwallowRule(),
         compile_rules.RetraceRule(),
         compile_rules.CacheKeyRule(),
         pallas_rules.PallasContractRule(),

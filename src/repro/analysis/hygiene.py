@@ -1,4 +1,4 @@
-"""Hot-path hygiene rules: HOST-SYNC, CHURN-INLINE-JIT, CHURN-STATIC.
+"""Hygiene rules: HOST-SYNC, CHURN-INLINE-JIT, CHURN-STATIC, EXC-SWALLOW.
 
 HOST-SYNC — inside a jit-decorated function (or a def nested in one) in
 ``fl/``, ``core/`` or ``kernels/``, a ``.item()`` / ``.tolist()`` /
@@ -209,3 +209,64 @@ class StaticArgRule(Rule):
             if d is not None:
                 defaults[p.arg] = d
         return params, defaults
+
+
+class ExcSwallowRule(Rule):
+    """EXC-SWALLOW — fault-swallowing except clauses in the resilience
+    surface (``fl/`` and ``serve/``).
+
+    A bare ``except:`` (or ``except Exception/BaseException:`` whose body
+    is only ``pass``/``...``/``continue``) silently eats the very faults
+    DESIGN.md §13 requires to land in exactly one verdict bucket — a
+    swallowed decode error is a byte-conservation violation waiting to
+    happen.  Handle the concrete exception, or turn it into a structured
+    ``Rejection`` / ``TransientClientError``.
+    """
+    id = "EXC-SWALLOW"
+    severity = Severity.WARN
+    doc = ("bare 'except:' / 'except Exception: pass' in fl/ or serve/ — "
+           "faults must become verdicts, not disappear")
+
+    _BROAD = {"Exception", "BaseException"}
+    _DIRS = ("repro/fl/", "repro/serve/")
+
+    def __init__(self, restrict: Optional[Sequence[str]] = None):
+        # restrict=() runs everywhere — the fixture corpus uses it
+        self.restrict = self._DIRS if restrict is None else tuple(restrict)
+
+    def run(self, src: SourceFile) -> Iterable[Finding]:
+        norm = src.path.replace("\\", "/")
+        if self.restrict and not any(d in norm for d in self.restrict):
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                findings.append(self.finding(
+                    src, node.lineno,
+                    "bare 'except:' swallows every fault (KeyboardInterrupt "
+                    "included) on the resilience surface",
+                    "catch the concrete exception and account it — a "
+                    "Rejection verdict or TransientClientError, not "
+                    "silence"))
+            elif dotted(node.type).split(".")[-1] in self._BROAD \
+                    and self._swallows(node.body):
+                findings.append(self.finding(
+                    src, node.lineno,
+                    f"'except {dotted(node.type)}: pass' drops the fault "
+                    "with no verdict, no log, no re-raise",
+                    "handle it or let it propagate — §13's byte ledger "
+                    "needs every failure attributed"))
+        return findings
+
+    @staticmethod
+    def _swallows(body: Sequence[ast.stmt]) -> bool:
+        for stmt in body:
+            if isinstance(stmt, (ast.Pass, ast.Continue)):
+                continue
+            if isinstance(stmt, ast.Expr) and isinstance(
+                    stmt.value, ast.Constant) and stmt.value.value is ...:
+                continue
+            return False
+        return True

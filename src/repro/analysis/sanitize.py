@@ -39,6 +39,33 @@ class KeyReuseError(RuntimeError):
     """The same concrete PRNG key material was consumed twice."""
 
 
+# states of every live sanitize() context, innermost last — the retry
+# path's deliberate-replay hook (reset_active) needs to reach whatever
+# sanitizer happens to be armed without threading state through the
+# whole federation call stack
+_ACTIVE: list = []
+
+
+def reset_active(reason: str = "") -> int:
+    """Forget consumption history in every live sanitizer context.
+
+    The client-phase retry loop (``fl.resilience.call_with_retry``)
+    replays an attempt with the SAME PRNG key on purpose — the attempt is
+    a pure function of the key, so the replay reproduces the message a
+    clean first attempt would have.  That is exactly what the key-reuse
+    tracer exists to flag, so the retry loop announces the replay here
+    (a documented suppression, not a bypass: ``n_resets`` records each
+    call, and ``reason`` is kept for the audit trail).  Returns the
+    number of live states reset — 0 when no sanitizer is armed.
+    """
+    for state in _ACTIVE:
+        state.reset()
+        state.n_resets += 1
+        if reason:
+            state.reset_reasons.append(reason)
+    return len(_ACTIVE)
+
+
 @dataclasses.dataclass
 class SanitizerState:
     # strict=False records reuse in ``n_errors`` without raising — the
@@ -49,6 +76,8 @@ class SanitizerState:
     n_checked: int = 0
     n_skipped_tracer: int = 0
     n_errors: int = 0
+    n_resets: int = 0              # reset_active() announcements received
+    reset_reasons: list = dataclasses.field(default_factory=list)
 
     def reset(self) -> None:
         """Forget consumption history (for deliberate same-key replays)."""
@@ -119,9 +148,11 @@ def sanitize(nans: bool = True, infs: bool = True,
                 continue
             saved_fns[name] = orig
             setattr(jrandom, name, make(name, orig))
+    _ACTIVE.append(state)
     try:
         yield state
     finally:
+        _ACTIVE.remove(state)
         for name, orig in saved_fns.items():
             setattr(jrandom, name, orig)
         for flag, val in saved_cfg.items():

@@ -474,6 +474,19 @@ def comm_bytes(cov_type: str, d: int, K: int, C: int,
     return n_parameters(cov_type, d, K, C) * bytes_per_scalar
 
 
+def nonfinite_fields(params, fields: Tuple[str, ...] = WIRE_FIELDS):
+    """Names of wire fields carrying NaN/Inf — ``[]`` when clean.
+
+    The finite-params half of the §13 wire gate: a poisoned GMM message
+    must be quarantined before it reaches ``fold_messages`` or the fused
+    head scan, where one NaN mean would silently poison every synthetic
+    draw of its slot.
+    """
+    return [f for f in fields
+            if not np.isfinite(np.asarray(params[f],
+                                          np.float32)).all()]
+
+
 def raw_feature_bytes(n_samples: int, d: int,
                       bytes_per_scalar: int = 2) -> int:
     """Cost of the Centralized baseline: ship every feature row."""

@@ -57,14 +57,16 @@ from repro.core import gmm as G
 from repro.core import head as H
 from repro.fl import ingest as IG
 from repro.fl import planner as P
+from repro.fl import resilience as RS
 from repro.fl import round as FR
 
 __all__ = [
     "QuantizedCodec", "WireHeader", "ClientMessage", "GMMSummarizer",
     "HeadSummarizer", "Star", "Chain", "Ring", "FedSession", "SessionResult",
     "SYNTHESIS_MODES", "encode_message", "stack_messages",
-    "messages_from_wire", "fused_slot_stack", "synthesize_batched",
-    "synthesize_chunks", "synthesize_group_chunks", "synthesize_looped",
+    "messages_from_wire", "decode_payload", "fused_slot_stack",
+    "synthesize_batched", "synthesize_chunks", "synthesize_group_chunks",
+    "synthesize_looped",
 ]
 
 # server synthesis policies (DESIGN.md §2): when the pool materializes and
@@ -126,6 +128,31 @@ class QuantizedCodec:
             off += n * itemsize
         assert off == len(payload), (off, len(payload))
         return out
+
+    def decode_checked(self, payload: bytes,
+                       shapes: Dict[str, Tuple[int, ...]],
+                       fields: Sequence[str]
+                       ) -> Tuple[Optional[Dict[str, np.ndarray]],
+                                  Optional[str]]:
+        """Validating :meth:`decode`: ``(params, None)`` on a clean
+        payload, ``(None, reason)`` on a length mismatch, ``(params,
+        reason)`` on non-finite scalars — never raises, so the broker can
+        quarantine a corrupted message instead of crashing the round
+        (DESIGN.md §13).
+        """
+        wd = _WIRE_DTYPES[self.dtype]
+        itemsize = np.dtype(wd).itemsize
+        want = sum(int(np.prod(shapes[f], dtype=np.int64)) if shapes[f]
+                   else 1 for f in fields) * itemsize
+        if len(payload) != want:
+            return None, (f"length_mismatch: payload is {len(payload)} "
+                          f"bytes, schema says {want}")
+        out = self.decode(payload, shapes, fields)
+        bad = G.nonfinite_fields(out, tuple(fields))
+        if bad:
+            return out, (f"non_finite: fields {bad} carry NaN/Inf "
+                         "after decode")
+        return out, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +304,46 @@ def encode_message(params: Dict, counts, logliks, *, kind: str,
                          header=header, payload=payload)
 
 
+def decode_payload(header: WireHeader, payload: bytes
+                   ) -> Tuple[Optional[Dict[str, np.ndarray]],
+                              Optional[str]]:
+    """Validating wire → params path: re-derive the full ``(C, …)`` f32
+    parameter stack from what actually crossed the wire.
+
+    Returns ``(params, None)`` on a clean payload; ``(None, reason)``
+    when the payload can't be decoded at all (bad schema / length);
+    ``(params, reason)`` when it decodes but carries non-finite scalars
+    (the caller sees both the poison and the diagnosis).  This is the
+    receiver-side inverse of :func:`encode_message` and the decode path
+    ``resilience.validate_message`` gates on — never raises.
+    """
+    if header.kind != "gmm":
+        return None, f"bad_header: kind={header.kind!r} — expected 'gmm'"
+    if header.dtype not in _WIRE_DTYPES:
+        return None, f"bad_header: unknown wire dtype {header.dtype!r}"
+    if header.cov_type not in G.COV_TYPES:
+        return None, f"bad_header: cov_type={header.cov_type!r}"
+    codec = QuantizedCodec(header.dtype)
+    C, K, d = header.n_classes, header.K, header.d
+    present = np.asarray(header.present, np.int64)
+    Cp = len(present)
+    shapes = {"pi": (Cp, K), "mu": (Cp, K, d),
+              "cov": _packed_cov_shape(header.cov_type, Cp, K, d)}
+    sub, err = codec.decode_checked(payload, shapes, _GMM_FIELDS)
+    if sub is None:
+        return None, err
+    cov_full = _unpack_cov(sub["cov"], header.cov_type, d)
+    decoded = {
+        "pi": np.full((C, K), 1.0 / K, np.float32),
+        "mu": np.zeros((C, K, d), np.float32),
+        "cov": np.zeros((C,) + cov_full.shape[1:], np.float32),
+    }
+    decoded["pi"][present] = sub["pi"]
+    decoded["mu"][present] = sub["mu"]
+    decoded["cov"][present] = cov_full
+    return decoded, err
+
+
 def stack_messages(messages: Sequence[ClientMessage]) -> Dict[str, jax.Array]:
     """Homogeneous messages → the server's stacked ``(M, C, K, …)`` batch."""
     return jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -285,7 +352,7 @@ def stack_messages(messages: Sequence[ClientMessage]) -> Dict[str, jax.Array]:
 
 def messages_from_wire(wire: Dict[str, jax.Array], counts, cov_type: str,
                        n_classes: int, codec: QuantizedCodec,
-                       logliks=None) -> List[ClientMessage]:
+                       logliks=None, validate: bool = False):
     """Replicated mesh wire pytree → per-client :class:`ClientMessage` list.
 
     ``wire`` is what ``core.distributed.fedpft_transfer``'s all_gather left
@@ -299,7 +366,15 @@ def messages_from_wire(wire: Dict[str, jax.Array], counts, cov_type: str,
     over PRESENT classes); the padded collective also carries absent
     classes' placeholder params — ``run_sharded`` reports that total
     separately as ``info["mesh_wire_bytes"]``.
+
+    ``validate=True`` is the mesh path's quarantine gate (DESIGN.md §13):
+    each decoded client whose parameters carry NaN/Inf is turned into a
+    structured :class:`~repro.fl.resilience.Rejection` instead of a
+    message, and the return becomes ``(messages, rejections)`` — byte
+    accounting uses the comm bytes the client's present classes *would*
+    have occupied on the host wire.
     """
+    from repro.fl import resilience as RS   # local: resilience ← api cycle
     counts = np.asarray(jax.device_get(counts)).astype(np.int64)
     I = counts.shape[0]
     d = int(wire["mu"].shape[-1])
@@ -307,13 +382,29 @@ def messages_from_wire(wire: Dict[str, jax.Array], counts, cov_type: str,
                               for k, v in wire.items()}, cov_type, d)
     if logliks is None:
         logliks = np.zeros((I, n_classes), np.float32)
-    return [
-        encode_message({k: np.asarray(v[i], np.float32)
-                        for k, v in unpacked.items()},
-                       counts[i], np.asarray(logliks)[i], kind="gmm",
-                       cov_type=cov_type, n_classes=n_classes, codec=codec)
-        for i in range(I)
-    ]
+    messages: List[ClientMessage] = []
+    rejections: List["RS.Rejection"] = []
+    for i in range(I):
+        params = {k: np.asarray(v[i], np.float32)
+                  for k, v in unpacked.items()}
+        if validate:
+            present = np.flatnonzero(counts[i] > 0)
+            bad = G.nonfinite_fields(
+                {k: params[k][present] for k in _GMM_FIELDS})
+            if bad:
+                K = params["mu"].shape[-2]
+                rejections.append(RS.Rejection(
+                    client_id=i, reason="non_finite",
+                    detail=f"mesh wire fields {bad} carry NaN/Inf",
+                    comm_bytes=G.comm_bytes(cov_type, d, K, len(present),
+                                            codec.bytes_per_scalar)))
+                continue
+        messages.append(encode_message(
+            params, counts[i], np.asarray(logliks)[i], kind="gmm",
+            cov_type=cov_type, n_classes=n_classes, codec=codec))
+    if validate:
+        return messages, rejections
+    return messages
 
 
 # ---------------------------------------------------------------------------
@@ -638,6 +729,28 @@ class SessionResult:
     messages: List[ClientMessage]
 
 
+def _fault_stats() -> Dict:
+    """Mutable client-phase retry ledger (one per round) — what lands in
+    ``info["faults"]`` next to the broker's verdict accounting."""
+    return {"attempts": 0, "retries": 0, "backoff_s": 0.0, "failed": []}
+
+
+def _merge_fault_info(info: Dict, acct: Dict,
+                      expected: Optional[int] = None) -> None:
+    """Fold broker accounting into ``info["faults"]``: coverage fraction
+    against the expected cohort and the ``degraded`` flag (any loss —
+    missing, quarantined, late, or after-close — marks the round partial).
+    Preserves client-phase retry stats already present under "faults"."""
+    if expected is None:
+        expected = acct["clients_seen"]
+    coverage = acct["admitted"] / expected if expected else 1.0
+    degraded = (acct["admitted"] < expected or acct["quarantined"] > 0
+                or acct["late"] > 0 or acct["closed"] > 0)
+    faults = info.setdefault("faults", {})
+    faults.update(degraded=bool(degraded), coverage=float(coverage),
+                  expected_clients=int(expected))
+
+
 @dataclasses.dataclass(frozen=True)
 class Star:
     """Clients → server, one shot (Algorithm 1)."""
@@ -646,11 +759,24 @@ class Star:
     def run(self, key, session: "FedSession", client_datasets
             ) -> SessionResult:
         keys = jax.random.split(key, len(client_datasets) + 1)
-        messages = [
-            session.client_update(k, f, y, i)
-            for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets))
-        ]
-        return session.server_aggregate(keys[0], messages)
+        stats = _fault_stats()
+        messages = []
+        for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets)):
+            msg = session._client_attempt(k, f, y, i, stats)
+            if msg is None:
+                # no broker in a non-streaming round — there is no ledger
+                # to absorb a lost client, so exhaustion is fatal here
+                raise RS.TransientClientError(
+                    f"client {i} still failing after "
+                    f"{session.resilience.max_retries + 1} attempts — "
+                    "use FedSession(ingest=...) to degrade instead")
+            messages.append(msg)
+        result = session.server_aggregate(keys[0], messages)
+        if stats["retries"]:
+            result.info.setdefault("faults", {}).update(
+                attempts=stats["attempts"], retries=stats["retries"],
+                backoff_s=stats["backoff_s"])
+        return result
 
 
 @dataclasses.dataclass(frozen=True)
@@ -741,6 +867,14 @@ class FedSession:
     #   peak server memory and the fused scan's compile key are independent
     #   of the cohort size M.  Requires synthesis="fused".
     ingest: Optional[IG.IngestConfig] = None
+    # -- fault policy (DESIGN.md §13) ---------------------------------------
+    #   ResilienceConfig arms the wire-level quarantine gate on the
+    #   host/mesh aggregate paths (the streaming broker has its own
+    #   IngestConfig.validate) and the client-phase retry contract:
+    #   TransientClientError replays the attempt up to max_retries times
+    #   with deterministic exponential backoff on an injected clock.
+    #   info["faults"] records attempts/retries/degraded/coverage.
+    resilience: Optional[RS.ResilienceConfig] = None
     # -- mesh execution mode (DESIGN.md §5) ---------------------------------
     mesh: Any = None               # jax Mesh with a "data" axis, or None
     shards: Optional[int] = None   # convenience: make_sim_mesh(shards)
@@ -778,6 +912,34 @@ class FedSession:
         return encode_message(params, counts, lls, kind=summ.kind,
                               cov_type=summ.cov_type,
                               n_classes=self.n_classes, codec=self.codec)
+
+    def _client_attempt(self, key, feats, labels, i: int, stats: Dict,
+                        client_fn=None, advance=None):
+        """One client's message under the session's retry contract.
+
+        With ``resilience`` set, :class:`~repro.fl.resilience
+        .TransientClientError` replays the attempt (same key — the
+        attempt is a pure function of it) up to ``max_retries`` times,
+        backoff accounted on ``advance``.  Returns None when the client
+        exhausted its attempts; the caller decides whether that drops
+        the client (streaming/chaos rounds) or fails the round (Star).
+        ``client_fn`` lets the chaos path wrap ``client_update`` in a
+        fault injector.
+        """
+        fn = self.client_update if client_fn is None else client_fn
+        if self.resilience is None:
+            stats["attempts"] += 1
+            return fn(key, feats, labels, i)
+        ok, msg, attempts, backoff = RS.call_with_retry(
+            lambda: fn(key, feats, labels, i), self.resilience,
+            advance=advance)
+        stats["attempts"] += attempts
+        stats["retries"] += attempts - 1
+        stats["backoff_s"] += backoff
+        if not ok:
+            stats["failed"].append(i)
+            return None
+        return msg
 
     def chain_step(self, key, feats, labels, i: int,
                    received: Optional[ClientMessage]
@@ -993,7 +1155,9 @@ class FedSession:
         _, k_head = jax.random.split(key)   # mirrors the fused branch's
         #   (k_syn, k_head) split — bit-identical head keys either way
         info["synthesis"] = "fused"
-        info["ingest"] = broker.accounting()
+        acct = broker.accounting()
+        info["ingest"] = acct
+        _merge_fault_info(info, acct, expected=len(messages))
         if state is None or len(state.slot_table()) == 0:
             return self._empty_cohort_result(k_head, info, messages,
                                              d=broker.header_d)
@@ -1001,7 +1165,9 @@ class FedSession:
                                       mesh=mesh)
 
     def aggregate_from_broker(self, key, broker,
-                              info: Optional[Dict] = None) -> SessionResult:
+                              info: Optional[Dict] = None,
+                              expected_clients: Optional[int] = None
+                              ) -> SessionResult:
         """Close an externally-owned :class:`~repro.fl.ingest.IngestBroker`
         and train the head from its reservoir.
 
@@ -1011,6 +1177,10 @@ class FedSession:
         :meth:`_ingest_aggregate` / :meth:`_run_streaming` — ``_, k_head =
         split(key)`` — so a service round is bit-identical to the offline
         session given the same admitted cohort and the same ``key``.
+        Partial rounds (deadline/quarantine losses) degrade instead of
+        failing: ``info["faults"]`` reports the ``degraded`` flag and the
+        coverage fraction against ``expected_clients`` (default: distinct
+        client ids the broker saw).
         """
         self._check_ingest_mode()
         state = broker.close()
@@ -1018,9 +1188,10 @@ class FedSession:
         base: Dict = {"synthesis": "fused"}
         if info:
             base.update(info)
-        base["ingest"] = broker.accounting()
-        base.setdefault("comm_bytes",
-                        broker.admitted_bytes + broker.late_bytes)
+        acct = broker.accounting()
+        base["ingest"] = acct
+        base.setdefault("comm_bytes", acct["sent_bytes"])
+        _merge_fault_info(base, acct, expected=expected_clients)
         if state is None or len(state.slot_table()) == 0:
             return self._empty_cohort_result(k_head, base, [],
                                              d=broker.header_d)
@@ -1038,6 +1209,24 @@ class FedSession:
         if kind == "gmm":
             mode = self._synthesis_mode()
             k_syn, k_head = jax.random.split(key)
+            if self.resilience is not None and self.resilience.validate:
+                # wire-level quarantine, host and mesh paths (§13): drop
+                # malformed/non-finite messages with a structured record
+                # instead of letting the fold/stack crash the round
+                d0 = int(messages[0].header.d)
+                kept, rejs = RS.partition_valid(messages, self.n_classes)
+                if rejs:
+                    info["quarantined"] = [dataclasses.asdict(r)
+                                           for r in rejs]
+                    info["quarantined_bytes"] = sum(r.comm_bytes
+                                                    for r in rejs)
+                    info["faults"] = {
+                        "degraded": True,
+                        "coverage": len(kept) / len(messages)}
+                    if not kept:
+                        return self._empty_cohort_result(k_head, info, [],
+                                                         d=d0)
+                    messages = kept
             if mode == "fused" and self.program_cache is not None:
                 try:
                     sig = FR.signature_of(messages)
@@ -1198,11 +1387,37 @@ class FedSession:
         counts = np.asarray(jax.device_get(counts)).astype(np.int64)
         if self.min_class_count:
             counts = np.where(counts >= self.min_class_count, counts, 0)
-        messages = messages_from_wire(wire, counts,
-                                      self.summarizer.cov_type,
-                                      self.n_classes, self.codec,
-                                      logliks=jax.device_get(lls))
-        result = self.server_aggregate(key, messages, mesh=mesh)
+        validate = self.resilience is not None and self.resilience.validate
+        decoded = messages_from_wire(wire, counts,
+                                     self.summarizer.cov_type,
+                                     self.n_classes, self.codec,
+                                     logliks=jax.device_get(lls),
+                                     validate=validate)
+        messages, wire_rejs = decoded if validate else (decoded, [])
+        if not messages:
+            # every client quarantined at the mesh wire: the empty-cohort
+            # guard, with the same (k_syn, k_head) split as the fused path
+            _, k_head = jax.random.split(key)
+            info: Dict = {
+                "comm_bytes": 0,
+                "quarantined": [dataclasses.asdict(r) for r in wire_rejs],
+                "quarantined_bytes": sum(r.comm_bytes for r in wire_rejs),
+                "faults": {"degraded": True, "coverage": 0.0},
+            }
+            result = self._empty_cohort_result(k_head, info, [],
+                                               d=int(feats.shape[-1]))
+        else:
+            result = self.server_aggregate(key, messages, mesh=mesh)
+            if wire_rejs:
+                result.info.setdefault(
+                    "quarantined", []).extend(dataclasses.asdict(r)
+                                              for r in wire_rejs)
+                result.info["quarantined_bytes"] = (
+                    result.info.get("quarantined_bytes", 0)
+                    + sum(r.comm_bytes for r in wire_rejs))
+                faults = result.info.setdefault("faults", {})
+                faults["degraded"] = True
+                faults["coverage"] = len(messages) / int(feats.shape[0])
         g = self.summarizer.gmm
         result.info.update(
             n_shards=int(mesh.shape["data"]),
@@ -1248,18 +1463,100 @@ class FedSession:
         broker = IG.IngestBroker(self.ingest, self.n_classes,
                                  samples_per_class=self.samples_per_class)
         comm = 0
+        stats = _fault_stats()
         for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets)):
-            msg = self.client_update(k, f, y, i)
+            msg = self._client_attempt(k, f, y, i, stats)
+            if msg is None:
+                continue    # retries exhausted: lost at source, the
+                #   broker's coverage fraction reports the gap
             comm += msg.comm_bytes
             broker.submit(i, msg)
             del msg
-        return self.aggregate_from_broker(keys[0], broker,
-                                          info={"comm_bytes": comm})
+        info: Dict = {"comm_bytes": comm}
+        if stats["retries"] or stats["failed"]:
+            info["faults"] = {"attempts": stats["attempts"],
+                              "retries": stats["retries"],
+                              "backoff_s": stats["backoff_s"],
+                              "failed_clients": stats["failed"]}
+        return self.aggregate_from_broker(
+            keys[0], broker, info=info,
+            expected_clients=len(client_datasets))
+
+    # -- chaos run (DESIGN.md §13) ------------------------------------------
+
+    def _run_chaos(self, key, client_datasets, plan) -> SessionResult:
+        """The streaming Star round under a :class:`~repro.fl.faults
+        .FaultPlan`: produce every client's message (transient failures
+        retried per the resilience contract), push the cohort through the
+        plan's delivery schedule on a fake clock, and close the round on
+        whatever the broker admitted.
+
+        Key plumbing is :meth:`_run_streaming`'s exactly (per-client
+        ``keys[1:]``, server ``keys[0]``), and retries replay the same
+        per-client key — so the produced messages, and therefore the
+        partial-round head, are bit-identical to an offline session fed
+        the surviving (admitted) clients in any order.
+        """
+        from repro.fl import faults as FJ
+        if self.ingest is None:
+            raise ValueError(
+                "FedSession.run(faults=...): chaos rounds stream through "
+                "the broker — set ingest=IngestConfig(...) so losses "
+                "degrade coverage instead of failing the round")
+        if self.mesh is not None or self.shards is not None:
+            raise NotImplementedError(
+                "FedSession.run(faults=...): chaos injection wraps the "
+                "host wire; the mesh round has no per-message delivery "
+                "to perturb")
+        self._check_ingest_mode()
+        if not isinstance(self.topology, Star):
+            raise NotImplementedError(
+                f"FedSession.run(faults=...): fault schedules target the "
+                f"one-shot Star cohort; {self.topology.name!r} relays "
+                "have no concurrent arrival stream")
+        M = len(client_datasets)
+        if not M:
+            raise ValueError("server_aggregate needs at least one message")
+        keys = jax.random.split(key, M + 1)
+        stats = _fault_stats()
+        produced: List[Tuple[int, ClientMessage]] = []
+        for i, (k, (f, y)) in enumerate(zip(keys[1:], client_datasets)):
+            fate = plan.fate(i)
+            fn = None
+            if fate.transient_fails:
+                fn = FJ.flaky(self.client_update, fate.transient_fails)
+            msg = self._client_attempt(k, f, y, i, stats, client_fn=fn)
+            if msg is not None:
+                produced.append((i, msg))
+        deliveries = FJ.schedule(plan, produced)
+        fake = {"t": 0.0}
+        broker = IG.IngestBroker(self.ingest, self.n_classes,
+                                 samples_per_class=self.samples_per_class,
+                                 clock=lambda: fake["t"])
+        for ev in deliveries:
+            fake["t"] = max(fake["t"], ev.t)   # arrivals are monotonic
+            broker.submit(ev.client_id, ev.message)
+        info: Dict = {"faults": {
+            "plan_seed": plan.seed,
+            "attempts": stats["attempts"],
+            "retries": stats["retries"],
+            "backoff_s": stats["backoff_s"],
+            "failed_clients": stats["failed"],
+            "produced": len(produced),
+            "delivered": len(deliveries),
+            # the survivor set — an offline session fed exactly these
+            # clients (same keys) reproduces this round's head bitwise
+            "admitted_clients": list(broker.admitted_ids),
+        }}
+        return self.aggregate_from_broker(keys[0], broker, info=info,
+                                          expected_clients=M)
 
     # -- entry point --------------------------------------------------------
 
-    def run(self, key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]]
-            ) -> SessionResult:
+    def run(self, key, client_datasets: Sequence[Tuple[jax.Array, jax.Array]],
+            faults=None) -> SessionResult:
+        if faults is not None:
+            return self._run_chaos(key, client_datasets, faults)
         if self.mesh is not None or self.shards is not None:
             shapes = {(tuple(np.shape(f)), tuple(np.shape(y)))
                       for f, y in client_datasets}

@@ -49,13 +49,21 @@ from repro.core import gmm as G
 from repro.fl import planner as P
 
 __all__ = ["IngestConfig", "IngestState", "IngestBroker", "slot_priority",
-           "fold_messages", "ADMITTED", "LATE", "DUPLICATE", "OVER_CAP"]
+           "fold_messages", "ADMITTED", "LATE", "DUPLICATE", "OVER_CAP",
+           "QUARANTINED", "CLOSED", "VERDICTS"]
 
-# broker verdicts — submit() returns one per message
+# broker verdicts — submit() returns one per message (DESIGN.md §13).
+# Precedence when several apply: CLOSED > LATE > QUARANTINED > DUPLICATE >
+# OVER_CAP — once the round is sealed nothing is inspected, and a corrupt
+# copy must not consume its client's one admission slot.
 ADMITTED = "admitted"
-LATE = "late"            # arrived after the deadline / explicit close
-DUPLICATE = "duplicate"  # client id already admitted this round
-OVER_CAP = "over_cap"    # admission policy: max_clients reached
+LATE = "late"              # arrived after the deadline, round still open
+DUPLICATE = "duplicate"    # client id already admitted this round
+OVER_CAP = "over_cap"      # admission policy: max_clients reached
+QUARANTINED = "quarantined"  # failed the wire-level validation gate
+CLOSED = "closed"          # arrived after close() sealed the round
+
+VERDICTS = (ADMITTED, LATE, DUPLICATE, OVER_CAP, QUARANTINED, CLOSED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +76,10 @@ class IngestConfig:
     admission; ``deadline_s`` closes the round this many seconds after the
     broker starts — later arrivals are accounted as stragglers, never
     folded.  ``seed`` keys the deterministic retention priorities.
+    ``validate`` arms the wire-level quarantine gate
+    (``resilience.validate_message``) on every submission: malformed or
+    non-finite messages draw a ``quarantined`` verdict instead of blowing
+    up ``fold_messages`` mid-round.
     The synthesis draw law (``samples_per_class``) stays on the session —
     one owner, no divergence.
     """
@@ -76,6 +88,7 @@ class IngestConfig:
     max_clients: Optional[int] = None
     deadline_s: Optional[float] = None
     seed: int = 0
+    validate: bool = True
 
     def __post_init__(self):
         if self.chunk_size < 1:
@@ -355,18 +368,21 @@ def fold_messages(state: IngestState,
 class IngestBroker:
     """Callback-driven admission loop for one streaming round.
 
-    ``submit(client_id, message)`` is the callback; it returns a verdict
-    (:data:`ADMITTED` / :data:`LATE` / :data:`DUPLICATE` /
-    :data:`OVER_CAP`) and folds pending admissions into the
+    ``submit(client_id, message)`` is the callback; it returns one of
+    :data:`VERDICTS` and folds pending admissions into the
     :class:`IngestState` every ``chunk_size`` messages, so at most one
     chunk of decoded messages is ever resident beside the fixed-capacity
-    state.  ``close()`` drains the remainder and seals the round; the
-    deadline (measured on the injectable ``clock``, default
-    ``time.monotonic``) seals admission implicitly — stragglers after it
-    are byte-accounted but never folded.  ``accounting()`` is the round's
-    ``info`` record: exact admitted/late bytes (``ClientMessage.
-    comm_bytes`` — the codec payload length), verdict counts, fold count,
-    reservoir occupancy, and the realized peak resident bytes.
+    state.  ``close()`` drains the remainder and seals the round —
+    submissions after it draw :data:`CLOSED`; the deadline (measured on
+    the injectable ``clock``, default ``time.monotonic``) seals admission
+    implicitly — stragglers after it draw :data:`LATE`.  Malformed or
+    non-finite messages draw :data:`QUARANTINED` (``cfg.validate``; the
+    first admitted message pins the round schema).  ``accounting()`` is
+    the round's ``info`` record: per-verdict counts AND bytes
+    (``ClientMessage.comm_bytes`` — the codec payload length), satisfying
+    the conservation law Σ per-verdict bytes == Σ submitted bytes; plus
+    fold count, reservoir occupancy, and the realized peak resident
+    bytes.
     """
 
     def __init__(self, cfg: IngestConfig, n_classes: int,
@@ -381,17 +397,33 @@ class IngestBroker:
         self._pending: List[Tuple[int, object]] = []
         self._pending_bytes = 0
         self._admitted_ids: set = set()
+        self._seen_ids: set = set()
         self._closed = False
+        self._schema: Optional[Tuple[str, int, int]] = None  # (cov, K, d)
+        #   pinned by the first admitted message; later submissions that
+        #   disagree are quarantined, not crashed on in fold_messages
         self.header_d: Optional[int] = None   # last-seen feature dim, any
         #   verdict — lets an all-straggler round still size its init head
         self.admitted = 0
         self.late = 0
         self.duplicates = 0
         self.over_cap = 0
+        self.quarantined = 0
+        self.closed_rejects = 0
         self.admitted_bytes = 0
         self.late_bytes = 0
+        self.duplicate_bytes = 0
+        self.over_cap_bytes = 0
+        self.quarantined_bytes = 0
+        self.closed_bytes = 0
+        self.sent_bytes = 0
+        self.rejections: List = []       # first _MAX_REJECTIONS Rejections
         self.chunks_folded = 0
         self.peak_resident_bytes = 0
+
+    # kept Rejection records are capped — a 100k-client corrupt flood must
+    # not grow an unbounded list; counts/bytes stay exact regardless
+    _MAX_REJECTIONS = 32
 
     # -- internals ----------------------------------------------------------
 
@@ -416,6 +448,20 @@ class IngestBroker:
         return self.cfg.deadline_s is not None and \
             (self._clock() - self._t0) > self.cfg.deadline_s
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def time_remaining(self) -> Optional[float]:
+        """Seconds until the deadline (None if the round has no deadline;
+        0.0 once passed or closed) — the service's admission-guard
+        signal."""
+        if self.cfg.deadline_s is None:
+            return None
+        if self._closed:
+            return 0.0
+        return max(0.0, self.cfg.deadline_s - (self._clock() - self._t0))
+
     def _fold(self) -> None:
         if not self._pending:
             return
@@ -435,7 +481,13 @@ class IngestBroker:
     # -- the callback surface -----------------------------------------------
 
     def submit(self, client_id: int, message) -> str:
-        """Offer one client's message; returns the admission verdict."""
+        """Offer one client's message; returns the admission verdict.
+
+        Every submission's bytes land in exactly one verdict bucket (the
+        §13 conservation law); precedence is CLOSED > LATE > QUARANTINED
+        > DUPLICATE > OVER_CAP, so a sealed round never inspects payloads
+        and a corrupt duplicate can't burn its client's admission slot.
+        """
         if message.header.kind != "gmm":
             raise ValueError(
                 f"IngestBroker: client {client_id} sent a "
@@ -443,20 +495,43 @@ class IngestBroker:
                 "folds GMM summaries; head messages aggregate via "
                 "FedSession(aggregate=...)")
         self.header_d = int(message.header.d)
-        if self._closed or self._past_deadline():
+        self._seen_ids.add(client_id)
+        nbytes = message.comm_bytes
+        self.sent_bytes += nbytes
+        if self._closed:
+            self.closed_rejects += 1
+            self.closed_bytes += nbytes
+            return CLOSED
+        if self._past_deadline():
             self.late += 1
-            self.late_bytes += message.comm_bytes
+            self.late_bytes += nbytes
             return LATE
+        if self.cfg.validate:
+            from repro.fl import resilience as RS   # local: no import cycle
+            rej = RS.validate_message(message, self.n_classes,
+                                      client_id=client_id,
+                                      expect=self._schema)
+            if rej is not None:
+                self.quarantined += 1
+                self.quarantined_bytes += nbytes
+                if len(self.rejections) < self._MAX_REJECTIONS:
+                    self.rejections.append(rej)
+                return QUARANTINED
         if client_id in self._admitted_ids:
             self.duplicates += 1
+            self.duplicate_bytes += nbytes
             return DUPLICATE
         if self.cfg.max_clients is not None and \
                 self.admitted >= self.cfg.max_clients:
             self.over_cap += 1
+            self.over_cap_bytes += nbytes
             return OVER_CAP
         self._admitted_ids.add(client_id)
+        if self._schema is None:
+            h = message.header
+            self._schema = (h.cov_type, int(h.K), int(h.d))
         self.admitted += 1
-        self.admitted_bytes += message.comm_bytes
+        self.admitted_bytes += nbytes
         self._pending.append((client_id, message))
         self._pending_bytes += self._message_bytes(message)
         self._track_peak()
@@ -474,6 +549,12 @@ class IngestBroker:
         self._closed = True
         return self._state
 
+    @property
+    def admitted_ids(self) -> Tuple[int, ...]:
+        """Admitted client ids, ascending — the surviving cohort a
+        partial-round bit-identity check replays offline."""
+        return tuple(sorted(self._admitted_ids))
+
     def accounting(self) -> Dict:
         s = self._state
         return {
@@ -481,8 +562,16 @@ class IngestBroker:
             "late": self.late,
             "duplicates": self.duplicates,
             "over_cap": self.over_cap,
+            "quarantined": self.quarantined,
+            "closed": self.closed_rejects,
             "admitted_bytes": self.admitted_bytes,
             "late_bytes": self.late_bytes,
+            "duplicate_bytes": self.duplicate_bytes,
+            "over_cap_bytes": self.over_cap_bytes,
+            "quarantined_bytes": self.quarantined_bytes,
+            "closed_bytes": self.closed_bytes,
+            "sent_bytes": self.sent_bytes,
+            "clients_seen": len(self._seen_ids),
             "chunks_folded": self.chunks_folded,
             "chunk_size": self.cfg.chunk_size,
             "capacity": self.cfg.capacity,

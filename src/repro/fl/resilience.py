@@ -1,0 +1,227 @@
+"""Defenses for the one-shot round: validation, quarantine, and retry.
+
+FedPFT gets exactly one round, so a malformed message cannot be repaired
+later — it must be *rejected with an explanation* (so the byte ledger
+still balances) and the round must close on whatever survived.  This
+module is the policy half of that contract; ``fl.faults`` is the attack
+half, and DESIGN.md §13 is the spec both are tested against.
+
+Three pieces:
+
+* :func:`validate_message` — the wire-level gate.  Header sanity
+  (kind/shape/count checks), exact payload-length check against the
+  schema's ``gmm.comm_bytes``, and a finite-params check on the decoded
+  scalars.  Returns a structured :class:`Rejection` (never raises), so
+  the broker can turn any failure into a ``quarantined`` verdict with
+  exact byte accounting instead of letting ``fold_messages`` blow up the
+  round.
+* :class:`ResilienceConfig` + :func:`call_with_retry` — the client-phase
+  retry contract: ``max_retries`` extra attempts with deterministic
+  exponential backoff measured on an injected clock (``advance``), never
+  a real ``sleep``.  A retried attempt deliberately replays the same
+  PRNG key (the attempt is a pure function of it — that is what makes
+  retries safe), so the runtime sanitizer is notified via
+  ``analysis.sanitize.reset_active`` before each replay.
+* :class:`TransientClientError` — what a summarizer (or the fault
+  injector's :func:`~repro.fl.faults.flaky` wrapper) raises to mean
+  "try again"; anything else propagates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import gmm as G
+
+__all__ = ["Rejection", "ResilienceConfig", "TransientClientError",
+           "validate_message", "partition_valid", "call_with_retry",
+           "backoff_schedule", "REJECT_REASONS"]
+
+# the closed vocabulary of Rejection.reason — DESIGN.md §13's taxonomy
+REJECT_REASONS = ("bad_header", "bad_counts", "length_mismatch",
+                  "non_finite", "schema_mismatch")
+
+
+class TransientClientError(RuntimeError):
+    """A client attempt failed in a retryable way (network blip, preempted
+    worker).  ``call_with_retry`` replays the attempt; any other exception
+    type is permanent and propagates."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """One quarantined message: who, why, and how many bytes it carried.
+
+    ``comm_bytes`` is the payload length that arrived — the broker adds
+    it to ``quarantined_bytes`` so every byte the cohort sent lands in
+    exactly one verdict class (the conservation law tier-1 asserts).
+    """
+    client_id: int
+    reason: str          # one of REJECT_REASONS
+    detail: str
+    comm_bytes: int
+
+    def __post_init__(self):
+        assert self.reason in REJECT_REASONS, self.reason
+
+
+def _wire_itemsize(dtype: str) -> Optional[int]:
+    if dtype == "bfloat16":
+        return 2
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        return None
+
+
+def validate_message(msg, n_classes: int, client_id: int = 0,
+                     expect: Optional[Tuple[str, int, int]] = None
+                     ) -> Optional[Rejection]:
+    """Wire-level gate for one GMM message: None if clean, else why not.
+
+    Checks, in order of cheapness: header schema sanity, per-class count
+    sanity, schema agreement with ``expect`` (the round's established
+    ``(cov_type, K, d)``), exact payload length against the present-class
+    ``gmm.comm_bytes``, and finiteness of every decoded payload scalar.
+    Never raises — a corrupted message is an expected input here, and the
+    caller turns the :class:`Rejection` into a ``quarantined`` verdict.
+    """
+    h = msg.header
+    b = msg.comm_bytes
+
+    def rej(reason: str, detail: str) -> Rejection:
+        return Rejection(client_id=int(client_id), reason=reason,
+                         detail=detail, comm_bytes=int(b))
+
+    if h.kind != "gmm":
+        return rej("bad_header", f"kind={h.kind!r} — expected 'gmm'")
+    if h.cov_type not in G.COV_TYPES:
+        return rej("bad_header", f"cov_type={h.cov_type!r} not in "
+                                 f"{G.COV_TYPES}")
+    if h.K < 1 or h.d < 1:
+        return rej("bad_header", f"K={h.K}, d={h.d} — need K≥1, d≥1")
+    if h.n_classes != n_classes or len(h.counts) != h.n_classes:
+        return rej("bad_header",
+                   f"n_classes={h.n_classes} / len(counts)="
+                   f"{len(h.counts)} ≠ round's C={n_classes}")
+    if any(int(c) < 0 for c in h.counts):
+        return rej("bad_counts", f"negative class count in {h.counts}")
+    if expect is not None and (h.cov_type, h.K, h.d) != tuple(expect):
+        return rej("schema_mismatch",
+                   f"(cov={h.cov_type!r}, K={h.K}, d={h.d}) ≠ round "
+                   f"schema (cov={expect[0]!r}, K={expect[1]}, "
+                   f"d={expect[2]})")
+    itemsize = _wire_itemsize(h.dtype)
+    if itemsize is None:
+        return rej("bad_header", f"unknown wire dtype {h.dtype!r}")
+    n_present = len(h.present)
+    want = G.comm_bytes(h.cov_type, h.d, h.K, n_present,
+                        bytes_per_scalar=itemsize)
+    if b != want:
+        return rej("length_mismatch",
+                   f"payload is {b} bytes, schema says {want} "
+                   f"({n_present} present classes × "
+                   f"{G.n_parameters(h.cov_type, h.d, h.K, 1)} params × "
+                   f"{itemsize} B)")
+    # decode through the validating codec path: the scalars the server
+    # would actually fold must all be finite
+    from repro.fl import api as FA   # local: api imports this module
+    params, err = FA.decode_payload(h, msg.payload)
+    if err is not None:
+        return rej("non_finite" if "finite" in err else "length_mismatch",
+                   err)
+    del params
+    return None
+
+
+def partition_valid(messages: Sequence, n_classes: int
+                    ) -> Tuple[List, List[Rejection]]:
+    """Split a message list into (clean, rejections) — position is the
+    client id, matching the Star round's enumeration."""
+    ok: List = []
+    rejs: List[Rejection] = []
+    for i, m in enumerate(messages):
+        r = validate_message(m, n_classes, client_id=i)
+        if r is None:
+            ok.append(m)
+        else:
+            rejs.append(r)
+    return ok, rejs
+
+
+# ---------------------------------------------------------------------------
+# client-phase retry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Session-level fault policy (``FedSession(resilience=...)``).
+
+    ``max_retries`` extra attempts per client on
+    :class:`TransientClientError`, backoff ``base · factor^attempt``
+    seconds applied to an *injected* clock — deterministic, never a real
+    sleep.  ``validate`` arms the wire gate on the host/mesh aggregate
+    paths (the streaming broker has its own ``IngestConfig.validate``).
+    """
+    max_retries: int = 2
+    backoff_base_s: float = 0.5
+    backoff_factor: float = 2.0
+    validate: bool = True
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"ResilienceConfig: max_retries="
+                             f"{self.max_retries} must be ≥ 0")
+        if self.backoff_base_s < 0 or self.backoff_factor < 1.0:
+            raise ValueError(
+                f"ResilienceConfig: backoff base={self.backoff_base_s}, "
+                f"factor={self.backoff_factor} — need base ≥ 0, "
+                "factor ≥ 1")
+
+
+def backoff_schedule(cfg: ResilienceConfig, n: int) -> List[float]:
+    """Delay before retry i (0-based): ``base · factor^i`` — the whole
+    contract, so tests can assert the realized waits exactly."""
+    return [cfg.backoff_base_s * cfg.backoff_factor ** i for i in range(n)]
+
+
+def call_with_retry(fn: Callable[[], object], cfg: ResilienceConfig,
+                    advance: Optional[Callable[[float], None]] = None):
+    """Run ``fn`` with up to ``cfg.max_retries`` replays on transient
+    failure.
+
+    Returns ``(ok, result, attempts, backoff_s)``: ``ok=False`` means the
+    client is lost (every attempt raised :class:`TransientClientError`) —
+    the caller decides whether that drops the client (streaming round) or
+    fails the round (no broker to absorb the loss).  ``advance`` receives
+    each backoff delay (a fake clock's advance hook); None discards them
+    (the delays are still summed in ``backoff_s``).
+
+    Each replay reuses the attempt's PRNG key on purpose — the attempt is
+    a pure function of the key, so a replay produces the identical
+    message a clean first attempt would have.  The runtime key-reuse
+    sanitizer would flag exactly that, so it is reset before each replay
+    (``analysis.sanitize.reset_active`` — a documented suppression, not a
+    bug; see DESIGN.md §13).
+    """
+    backoff = 0.0
+    for attempt in range(cfg.max_retries + 1):
+        if attempt > 0:
+            delay = cfg.backoff_base_s * cfg.backoff_factor ** (attempt - 1)
+            backoff += delay
+            if advance is not None:
+                advance(delay)
+            # NB: the package re-exports a sanitize() *function* that
+            # shadows the submodule as a package attribute — import the
+            # name straight from the submodule path
+            from repro.analysis.sanitize import reset_active
+            reset_active(f"client retry attempt {attempt}: "
+                         "deliberate same-key replay")
+        try:
+            return True, fn(), attempt + 1, backoff
+        except TransientClientError:
+            continue
+    return False, None, cfg.max_retries + 1, backoff

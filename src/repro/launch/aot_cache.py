@@ -205,6 +205,18 @@ class ProgramCache:
                 "serialize_failures": self.serialize_failures,
                 "total_compile_us": self.total_compile_us}
 
+    def snapshot(self) -> Dict[str, Any]:
+        """``stats()`` frozen for a later :meth:`delta` — the
+        zero-new-compiles assertion of the chaos/serve benchmarks:
+        ``delta(before)["compiles"] == 0`` after warmup proves degraded
+        partial-round closes reuse the warm program."""
+        return self.stats()
+
+    def delta(self, before: Dict[str, Any]) -> Dict[str, Any]:
+        """Counter movement since ``before`` (a :meth:`snapshot`)."""
+        now = self.stats()
+        return {k: now[k] - before.get(k, 0) for k in now}
+
 
 def canonical_grid(C: int, d: int, Ms: Sequence[int] = (4, 16, 64),
                    Ks: Sequence[int] = (1, 2, 4),

@@ -44,6 +44,23 @@ from repro.models.config import ModelConfig
 EXTRACT = "extract"
 INFER = "infer"
 
+# extract admission policies near the round deadline (DESIGN.md §13):
+# "shed" refuses with AdmissionError, "defer" parks the request for the
+# next round
+SHED = "shed"
+DEFER = "defer"
+
+
+class AdmissionError(RuntimeError):
+    """An extract request was refused: too close to the round deadline.
+
+    Raised only under ``extract_admission="shed"`` — a feature extracted
+    with less than ``deadline_guard_s`` of round left cannot be fitted,
+    encoded, and submitted before the broker seals, so the work would be
+    wasted device time.  The client should retry next round (or the
+    deployment should use ``"defer"`` to have the service hold it).
+    """
+
 
 @dataclasses.dataclass
 class ServiceRequest:
@@ -62,6 +79,8 @@ class ServiceRequest:
     feats: Optional[np.ndarray] = None   # (d,) — extraction result
     label: Optional[int] = None          # head argmax — inference result
     done: bool = False
+    deferred: bool = False         # parked past a deadline, re-enqueued
+                                   # at the next close_round
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +89,12 @@ class ServiceConfig:
     max_seq: int = 64
     min_bucket: int = 8
     extract_share: float = 0.5     # guaranteed extract fraction of the pool
+    # admission control near the broker deadline: an extract arriving with
+    # < deadline_guard_s of round left can't round-trip (extract → fit →
+    # submit) before the broker seals.  0.0 disables the guard; the guard
+    # is inert anyway when the session's IngestConfig has no deadline.
+    deadline_guard_s: float = 0.0
+    extract_admission: str = SHED  # SHED refuses, DEFER parks to next round
 
     def __post_init__(self):
         if not 0.0 <= self.extract_share <= 1.0:
@@ -77,6 +102,13 @@ class ServiceConfig:
                              f"{self.extract_share} must be in [0, 1]")
         if self.n_slots < 1:
             raise ValueError(f"ServiceConfig: n_slots={self.n_slots}")
+        if self.deadline_guard_s < 0.0:
+            raise ValueError(f"ServiceConfig: deadline_guard_s="
+                             f"{self.deadline_guard_s} must be >= 0")
+        if self.extract_admission not in (SHED, DEFER):
+            raise ValueError(f"ServiceConfig: extract_admission="
+                             f"{self.extract_admission!r} not in "
+                             f"({SHED!r}, {DEFER!r})")
 
 
 class FedPFTService:
@@ -113,11 +145,14 @@ class FedPFTService:
         self.completed: Dict[str, List[ServiceRequest]] = {
             EXTRACT: [], INFER: []}
         self.rejected_no_head = 0
+        self.shed_extracts = 0
+        self.deferred_extracts = 0
+        self._deferred: Deque[ServiceRequest] = collections.deque()
 
     def _fresh_broker(self) -> IG.IngestBroker:
         return IG.IngestBroker(self.session.ingest, self.session.n_classes,
                                samples_per_class=self.session
-                               .samples_per_class)
+                               .samples_per_class, clock=self.clock)
 
     # -- request ingress ----------------------------------------------------
 
@@ -137,7 +172,32 @@ class FedPFTService:
         return req
 
     def submit_extract(self, tokens) -> ServiceRequest:
-        """Queue a feature-extraction request (a client's raw sample)."""
+        """Queue a feature-extraction request (a client's raw sample).
+
+        Near the round deadline (less than ``deadline_guard_s`` of broker
+        time left) the request is shed (:class:`AdmissionError`) or
+        deferred to the next round, per ``extract_admission`` — features
+        that cannot make it back through fit + submit before the broker
+        seals are wasted device time.
+        """
+        guard = self.scfg.deadline_guard_s
+        if guard > 0.0:
+            left = self.broker.time_remaining()
+            if left is not None and left < guard:
+                if self.scfg.extract_admission == SHED:
+                    self.shed_extracts += 1
+                    raise AdmissionError(
+                        f"FedPFTService: {left:.3f}s left in the round < "
+                        f"deadline_guard_s={guard}s — extraction cannot "
+                        f"complete the fit/submit round-trip; retry next "
+                        f"round")
+                req = ServiceRequest(rid=self._next_rid, kind=EXTRACT,
+                                     tokens=np.asarray(tokens),
+                                     t_submit=self.clock(), deferred=True)
+                self._next_rid += 1
+                self.deferred_extracts += 1
+                self._deferred.append(req)
+                return req
         return self._enqueue(EXTRACT, tokens)
 
     def submit_infer(self, tokens) -> ServiceRequest:
@@ -153,7 +213,9 @@ class FedPFTService:
         """Forward a client's GMM wire message to the round's broker.
 
         Returns the broker verdict (``admitted``/``late``/``duplicate``/
-        ``over_capacity``) so the client can react.
+        ``over_capacity``/``quarantined``/``closed``) so the client can
+        react — quarantined payloads are rejected at the wire without
+        touching the reservoir (DESIGN.md §13).
         """
         return self.broker.submit(client_id, message)
 
@@ -237,12 +299,16 @@ class FedPFTService:
 
         Key plumbing is :meth:`FedSession.aggregate_from_broker`'s — the
         service head is bit-identical to the offline session's on the
-        same admitted cohort.  A fresh broker opens for the next round.
+        same admitted cohort.  A fresh broker opens for the next round,
+        and extracts deferred past the old round's deadline re-enter the
+        work queue against it.
         """
         result = self.session.aggregate_from_broker(key, self.broker)
         self.head = result.model
         self.broker = self._fresh_broker()
         self.rounds += 1
+        while self._deferred:
+            self.queues[EXTRACT].append(self._deferred.popleft())
         return result
 
     def warmup(self, d: int) -> Dict:
@@ -269,6 +335,9 @@ class FedPFTService:
         """Throughput + latency per traffic class, broker accounting."""
         out: Dict = {"steps": self.steps, "rounds": self.rounds,
                      "rejected_no_head": self.rejected_no_head,
+                     "shed_extracts": self.shed_extracts,
+                     "deferred_extracts": self.deferred_extracts,
+                     "deferred_pending": len(self._deferred),
                      "feature_compiles": self.feature_compiles(),
                      "ingest": self.broker.accounting()}
         for kind, reqs in self.completed.items():

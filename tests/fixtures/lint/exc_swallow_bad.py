@@ -1,0 +1,34 @@
+"""EXC-SWALLOW corpus: fault-eating except clauses on the resilience
+surface — each one disappears a failure §13 requires to become a
+verdict."""
+
+
+def bare_except_eats_everything(broker, cid, msg):
+    try:
+        return broker.submit(cid, msg)
+    except:  # noqa: E722
+        return None
+
+
+def broad_pass_swallows(payload, decode):
+    try:
+        return decode(payload)
+    except Exception:
+        pass
+
+
+def broad_ellipsis_swallows(payload, decode):
+    try:
+        return decode(payload)
+    except BaseException:
+        ...
+
+
+def broad_continue_swallows(messages, decode):
+    out = []
+    for m in messages:
+        try:
+            out.append(decode(m))
+        except Exception:
+            continue
+    return out

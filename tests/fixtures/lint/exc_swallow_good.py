@@ -1,0 +1,28 @@
+"""EXC-SWALLOW good twin: narrow catches, and broad catches that
+*account* the fault instead of disappearing it."""
+
+
+class Rejection(Exception):
+    pass
+
+
+def narrow_catch_is_fine(payload, decode):
+    try:
+        return decode(payload)
+    except ValueError:
+        return None                     # concrete exception, handled
+
+
+def broad_catch_with_accounting(broker, cid, msg, log):
+    try:
+        return broker.submit(cid, msg)
+    except Exception as e:              # broad, but the fault is recorded
+        log.append((cid, repr(e)))
+        raise Rejection(str(e)) from e
+
+
+def broad_catch_rewrapping(fn):
+    try:
+        return fn()
+    except Exception as e:              # broad, but re-raised structured
+        raise Rejection("fn failed") from e

@@ -70,6 +70,31 @@ class TestFixtureCorpus:
         assert {f.rule for f in out["host_sync_bad.py"]} == {"HOST-SYNC"}
         assert out["host_sync_good.py"] == []
 
+    def test_exc_swallow_pair_under_resilience_surface(self):
+        # EXC-SWALLOW only fires under repro/{fl,serve}/ — load the
+        # fixture text under a synthetic fl/ path
+        from repro.analysis.hygiene import ExcSwallowRule
+        rule = ExcSwallowRule()
+        out = {}
+        for name in ("exc_swallow_bad.py", "exc_swallow_good.py"):
+            src = SourceFile.load(str(FIXDIR / name))
+            src.path = f"src/repro/fl/{name}"
+            out[name] = list(rule.run(src))
+        assert len(out["exc_swallow_bad.py"]) == 4, \
+            [f.format() for f in out["exc_swallow_bad.py"]]
+        assert all(f.rule == "EXC-SWALLOW" and f.gates
+                   for f in out["exc_swallow_bad.py"])
+        assert out["exc_swallow_good.py"] == [], \
+            [f.format() for f in out["exc_swallow_good.py"]]
+
+    def test_exc_swallow_silent_outside_restricted_dirs(self):
+        from repro.analysis.hygiene import ExcSwallowRule
+        src = SourceFile.load(str(FIXDIR / "exc_swallow_bad.py"))
+        src.path = "src/repro/core/exc_swallow_bad.py"
+        assert list(ExcSwallowRule().run(src)) == []
+        # restrict=() disables the path gate — the corpus harness's knob
+        assert len(list(ExcSwallowRule(restrict=()).run(src))) == 4
+
     def test_three_historical_key_bugs_all_detected(self):
         """The reason this framework exists: the corpus extracted from the
         pre-fix commits of PRs 1, 2 and 4 must never pass the linter."""

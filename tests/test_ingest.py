@@ -315,11 +315,79 @@ class TestBroker:
             H.HeadConfig(n_steps=20), "diag")
         assert np.isfinite(np.asarray(head["w"])).all()
 
-    def test_submit_after_close_is_late(self):
+    def test_submit_after_close_is_closed(self):
+        """A sealed round answers ``closed`` — not ``late`` (that verdict
+        is for deadline stragglers while the round is live) — and the
+        refused bytes land in the ``closed_bytes`` bucket."""
         broker = self._broker()
         broker.submit(0, _msg(0, [1, 1, 1, 1]))
         broker.close()
-        assert broker.submit(1, _msg(1, [1, 1, 1, 1])) == IG.LATE
+        m = _msg(1, [1, 1, 1, 1])
+        assert broker.submit(1, m) == IG.CLOSED
+        acct = broker.accounting()
+        assert acct["closed"] == 1
+        assert acct["closed_bytes"] == m.comm_bytes
+        assert acct["late"] == 0
+
+    def test_duplicate_after_close_is_closed(self):
+        """CLOSED outranks DUPLICATE: the sealed round refuses a replayed
+        client id without consulting the duplicate set."""
+        broker = self._broker()
+        m = _msg(0, [1, 1, 1, 1])
+        assert broker.submit(0, m) == IG.ADMITTED
+        broker.close()
+        assert broker.submit(0, m) == IG.CLOSED
+        acct = broker.accounting()
+        assert acct["duplicates"] == 0 and acct["closed"] == 1
+
+    def test_byte_conservation_across_all_verdicts(self):
+        """Σ per-verdict bytes == sent_bytes with every verdict class
+        exercised in one round (admitted, duplicate, over_cap, late,
+        quarantined, closed)."""
+        t = {"now": 0.0}
+        broker = IG.IngestBroker(
+            IG.IngestConfig(chunk_size=4, capacity=64, max_clients=2,
+                            deadline_s=5.0),
+            N_CLASSES, clock=lambda: t["now"])
+        m0, m1, m2 = (_msg(i, [1, 1, 1, 1]) for i in range(3))
+        assert broker.submit(0, m0) == IG.ADMITTED
+        assert broker.submit(0, m0) == IG.DUPLICATE
+        bad = dataclasses.replace(m1, payload=m1.payload[:-3])
+        assert broker.submit(1, bad) == IG.QUARANTINED
+        assert broker.submit(1, m1) == IG.ADMITTED
+        assert broker.submit(2, m2) == IG.OVER_CAP
+        t["now"] = 9.0
+        assert broker.submit(2, m2) == IG.LATE
+        broker.close()
+        assert broker.submit(2, m2) == IG.CLOSED
+        acct = broker.accounting()
+        assert (acct["admitted"], acct["duplicates"], acct["quarantined"],
+                acct["over_cap"], acct["late"], acct["closed"]) \
+            == (2, 1, 1, 1, 1, 1)
+        per_verdict = (acct["admitted_bytes"] + acct["duplicate_bytes"]
+                       + acct["quarantined_bytes"] + acct["over_cap_bytes"]
+                       + acct["late_bytes"] + acct["closed_bytes"])
+        assert per_verdict == acct["sent_bytes"]
+        # 2×m0 (admit+dup), m1, 3×m2 (over_cap+late+closed), 1 truncated
+        assert acct["sent_bytes"] == 6 * m0.comm_bytes + bad.comm_bytes
+
+    def test_quarantine_keeps_reservoir_clean(self):
+        """A truncated payload is rejected at the wire: the reservoir
+        state equals a round that never saw it, and the rejection is
+        recorded with a structured reason."""
+        items = _cohort(4)
+        broker = self._broker()
+        cid0, m0 = items[0]
+        bad = dataclasses.replace(m0, payload=m0.payload[:-5])
+        assert broker.submit(99, bad) == IG.QUARANTINED
+        for cid, m in items:
+            assert broker.submit(cid, m) == IG.ADMITTED
+        state = broker.close()
+        assert _states_equal(state, _fold_chunks(items, 4))
+        assert broker.rejections[0].reason == "length_mismatch"
+        assert broker.rejections[0].client_id == 99
+        # quarantined id never admitted → doesn't trip the duplicate set
+        assert 99 not in broker.admitted_ids
 
     def test_peak_bytes_independent_of_M(self):
         """THE memory law: same (capacity, chunk_size, message schema) →

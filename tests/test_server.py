@@ -354,3 +354,100 @@ def test_serve_dir_lint_clean():
     fs = analyze_paths([str(root / "src" / "repro" / "serve")],
                        semantic=False)
     assert gating(fs) == [], "\n".join(f.format() for f in gating(fs))
+
+
+# -- deadline admission control (DESIGN.md §13) -----------------------------
+
+
+def _deadline_service(model, t, deadline_s=10.0, **kw):
+    """A service on a fake clock whose session broker has a deadline."""
+    from repro.core import gmm as G
+    from repro.fl.api import FedSession, GMMSummarizer
+    from repro.fl.ingest import IngestConfig
+    from repro.serve.service import FedPFTService, ServiceConfig
+    cfg, params = model
+    sess = FedSession(n_classes=3,
+                      summarizer=GMMSummarizer(G.GMMConfig(2, "diag")),
+                      ingest=IngestConfig(capacity=16, chunk_size=4,
+                                          deadline_s=deadline_s))
+    return FedPFTService(cfg, params, sess,
+                         ServiceConfig(n_slots=4, max_seq=32, **kw),
+                         clock=lambda: t["now"])
+
+
+def test_service_sheds_extract_near_deadline(model):
+    from repro.serve.service import AdmissionError
+    t = {"now": 0.0}
+    svc = _deadline_service(model, t, deadline_s=10.0,
+                            deadline_guard_s=3.0)
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(1, svc.cfg.vocab_size, size=5)
+    assert svc.submit_extract(prompt).kind == "extract"   # plenty of time
+    t["now"] = 8.0                                        # 2s left < guard
+    with pytest.raises(AdmissionError, match="deadline_guard"):
+        svc.submit_extract(prompt)
+    assert svc.stats()["shed_extracts"] == 1
+    assert len(svc.queues["extract"]) == 1                # nothing parked
+
+
+def test_service_defers_extract_to_next_round(model):
+    t = {"now": 0.0}
+    svc = _deadline_service(model, t, deadline_s=10.0,
+                            deadline_guard_s=3.0, extract_admission="defer")
+    rng = np.random.default_rng(22)
+    datasets = _extract_cohort(svc, rng, n_clients=2, n_per=8)
+    key = jax.random.PRNGKey(23)
+    keys = jax.random.split(key, 3)
+    for i, (feats, labels) in enumerate(datasets):
+        assert svc.submit_update(i, svc.session.client_update(
+            keys[1 + i], feats, labels, i)) == "admitted"
+    t["now"] = 9.0
+    late_req = svc.submit_extract(rng.integers(1, svc.cfg.vocab_size,
+                                               size=6))
+    assert late_req.deferred and not svc.queues["extract"]
+    st = svc.stats()
+    assert st["deferred_extracts"] == 1 and st["deferred_pending"] == 1
+    svc.close_round(keys[0])
+    # the parked request re-entered the new round's queue
+    assert [r.rid for r in svc.queues["extract"]] == [late_req.rid]
+    svc.drain()
+    assert late_req.done and late_req.feats is not None
+    assert svc.stats()["deferred_pending"] == 0
+
+
+@pytest.mark.slow
+def test_service_partial_round_matches_offline_survivors(model):
+    """Stragglers and corrupt payloads degrade the service round; the
+    head it serves equals — bitwise — the offline session fed only the
+    admitted clients, and every submitted byte lands in one verdict."""
+    import dataclasses as _dc
+    t = {"now": 0.0}
+    svc = _deadline_service(model, t, deadline_s=10.0)
+    rng = np.random.default_rng(24)
+    datasets = _extract_cohort(svc, rng, n_clients=4, n_per=8)
+    key = jax.random.PRNGKey(25)
+    keys = jax.random.split(key, len(datasets) + 1)
+    msgs = [svc.session.client_update(keys[1 + i], f, y, i)
+            for i, (f, y) in enumerate(datasets)]
+    assert svc.submit_update(0, msgs[0]) == "admitted"
+    assert svc.submit_update(1, msgs[1]) == "admitted"
+    bad = _dc.replace(msgs[2], payload=msgs[2].payload[:-5])
+    assert svc.submit_update(2, bad) == "quarantined"     # corrupt in flight
+    t["now"] = 11.0
+    assert svc.submit_update(3, msgs[3]) == "late"        # straggler
+    acct = svc.broker.accounting()
+    assert acct["admitted_bytes"] + acct["quarantined_bytes"] \
+        + acct["late_bytes"] == acct["sent_bytes"]
+    res = svc.close_round(keys[0])
+    assert res.info["faults"]["degraded"]
+    # a fresh broker opened: the straggler is welcome in the NEXT round
+    assert svc.submit_update(3, msgs[3]) == "admitted"
+
+    from repro.fl.ingest import IngestBroker, IngestConfig
+    off = IngestBroker(IngestConfig(capacity=16, chunk_size=4), 3,
+                       clock=lambda: 0.0)
+    off.submit(0, msgs[0])
+    off.submit(1, msgs[1])
+    res_off = svc.session.aggregate_from_broker(keys[0], off)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), res.model, res_off.model)
